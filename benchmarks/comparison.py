@@ -1,0 +1,20 @@
+"""Table IV: average distance + energy/hop vs flat-mesh architectures."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.routing import Fabric, avg_distance_hierarchical, avg_distance_mesh
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    for n in (1024, 4096, 65536):
+        mesh = avg_distance_mesh(n)
+        hier = avg_distance_hierarchical(n, cluster=4)
+        out.append((f"table4_avg_dist_mesh_n{n}", 0.0, f"{mesh:.1f}(2sqrtN/3={2*np.sqrt(n)/3:.1f})"))
+        out.append((f"table4_avg_dist_hier_n{n}", 0.0, f"{hier:.1f}(sqrtN/3={np.sqrt(n)/3:.1f})"))
+    fab = Fabric()
+    out.append(("table4_energy_per_hop_pJ_1.3V", 0.0, f"{fab.constants.energy_per_hop_j * 1e12:.0f}"))
+    out.append(("table4_fan_in_out", 0.0, "64/4k"))
+    return out

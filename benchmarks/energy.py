@@ -1,0 +1,29 @@
+"""Table III + Fig 11: per-operation energy and chip power vs firing rate."""
+
+from __future__ import annotations
+
+from repro.core.routing import Fabric
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    fab = Fabric()
+    e = fab.constants.energy_j
+    for vdd in (1.8, 1.3):
+        for op, val in e[vdd].items():
+            out.append((f"table3_{op}_at_{vdd}V_pJ", 0.0, f"{val * 1e12:.0f}"))
+    # local vs cross-chip delivered-spike energy (1.3 V)
+    out.append(("table3_local_event_total_nJ", 0.0, f"{fab.energy_j(0, 0, 1.3) * 1e9:.2f}"))
+    out.append(("table3_crosschip_event_total_nJ", 0.0, f"{fab.energy_j(0, 16, 1.3) * 1e9:.2f}"))
+
+    # Fig 11: power at all-neuron firing, 25% connectivity, 4 cores (model)
+    n_neurons, fan = 1024, 256
+    for rate in (10.0, 50.0, 100.0):
+        spikes_s = n_neurons * rate
+        e13 = e[1.3]
+        # spike + encode per source event; broadcast+extend per destination core (4)
+        p = spikes_s * (e13["spike"] + e13["encode"]) + spikes_s * 4 * (
+            e13["broadcast"] / 256 * fan / 4 + e13["route_core"]
+        )
+        out.append((f"fig11_power_at_{rate:.0f}hz_uW", 0.0, f"{p * 1e6:.1f}"))
+    return out

@@ -1,0 +1,50 @@
+"""Fig. 13 + §II: routing-memory scaling — this work (linear) vs TrueNorth
+(quadratic), and the paper's headline 160k vs ~1.2k bits/neuron example."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import memory_model as mm
+
+
+def _truenorth_bits(n_neurons: float) -> float:
+    """TrueNorth allocates extra routing cores for fan-out: cores ~ quadratic
+    in model size (Fig. 13's fit). Each core: 256x410 bit crossbar+config."""
+    cores = (n_neurons / 256.0) ** 2 * 1.2e-2 + n_neurons / 256.0
+    return cores * 256 * 410
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    t0 = time.perf_counter()
+    # paper headline: N=2^20, F=2^13, C=256
+    conv = mm.conventional_bits(2**20, 2**13)
+    opt = mm.mem_at_optimal_m(2**20, 2**13, 256)
+    per_side = opt / 2
+    out.append(("fig13_headline_conventional_bits", 0.0, f"{conv:.0f}"))
+    out.append(("fig13_headline_optimized_bits_per_side", 0.0, f"{per_side:.1f}"))
+    out.append(("fig13_headline_reduction_x", 0.0, f"{conv / opt:.1f}"))
+
+    # Fig 13 curves: CNN model sizes vs total routing bits (KM/C=64, +2 bits
+    # per word for 4 synapse types, as in the paper's plot).
+    sizes = np.array([2**i for i in range(10, 21)], dtype=float)
+    ours, tn = [], []
+    for n in sizes:
+        c, k, m = 256.0, 256.0, 64.0
+        per_neuron = mm.mem_total_bits(n, f=4096, c=c, m=m, k=k) + 2 * 64
+        ours.append(per_neuron * n)
+        tn.append(_truenorth_bits(n))
+    ours, tn = np.array(ours), np.array(tn)
+    # linear vs quadratic: log-log slope
+    slope_ours = np.polyfit(np.log(sizes), np.log(ours), 1)[0]
+    slope_tn = np.polyfit(np.log(sizes), np.log(tn), 1)[0]
+    dt = (time.perf_counter() - t0) * 1e6
+    out.append(("fig13_loglog_slope_this_work", dt, f"{slope_ours:.2f}"))
+    out.append(("fig13_loglog_slope_truenorth", dt, f"{slope_tn:.2f}"))
+    out.append(
+        ("fig13_crossover_advantage_at_1M", 0.0, f"{tn[-1] / ours[-1]:.1f}x")
+    )
+    return out

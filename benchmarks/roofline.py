@@ -1,0 +1,70 @@
+"""§Roofline reader: aggregates experiments/dryrun/*.json into the table.
+
+Prints one row per (arch x shape x mesh): the three terms (seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the MFU upper bound.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun"),
+)
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    if not os.path.isdir(ART):
+        return cells
+    for fn in sorted(os.listdir(ART)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(ART, fn)) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        cells.append(r)
+    return cells
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    for r in load_cells():
+        rf = r["roofline"]
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        ratio = rf.get("model_flops_ratio")
+        derived = (
+            f"c={rf['compute_s']:.3e}s|m={rf['memory_s']:.3e}s|x={rf['collective_s']:.3e}s"
+            f"|dom={rf['dominant']}|useful={ratio:.2f}|mfu_ub={rf['mfu_upper_bound']:.4f}"
+            if ratio
+            else f"dom={rf['dominant']}"
+        )
+        out.append((name, 0.0, derived))
+    if not out:
+        out.append(("roofline_no_artifacts", 0.0, "run repro.launch.dryrun first"))
+    return out
+
+
+def table(mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful-FLOP ratio | MFU bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_cells(mesh):
+        rf = r["roofline"]
+        ratio = rf.get("model_flops_ratio") or 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+            f"| {rf['collective_s']:.3e} | {rf['dominant']} | {ratio:.2f} "
+            f"| {rf['mfu_upper_bound'] if rf['mfu_upper_bound'] else 0:.4f} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "single"))

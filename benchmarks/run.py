@@ -1,0 +1,53 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  Table II  -> routing_throughput   Table III + Fig 11 -> energy
+  Table IV  -> comparison           Table V + Fig 12   -> cnn_poker
+  Fig 13 + §II headline -> memory_scaling
+  beyond-paper (MoE dispatch mapping) -> dispatch
+  §Roofline artifacts -> roofline
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        cnn_poker,
+        comparison,
+        dispatch,
+        energy,
+        memory_scaling,
+        roofline,
+        routing_throughput,
+    )
+
+    modules = [
+        ("memory_scaling", memory_scaling),
+        ("routing_throughput", routing_throughput),
+        ("energy", energy),
+        ("comparison", comparison),
+        ("cnn_poker", cnn_poker),
+        ("dispatch", dispatch),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        try:
+            for row, us, derived in mod.run():
+                print(f"{row},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001 — report per-bench failures, keep going
+            failed += 1
+            print(f"{name},nan,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"{failed} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

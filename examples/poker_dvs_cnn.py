@@ -1,0 +1,103 @@
+"""Paper §V application: event-driven spiking CNN classifying poker suits.
+
+Reproduces the experiment's structure on synthetic DVS event streams (the
+original poker-DVS recordings are not redistributable here): Table-V network
+(conv 4x8x8/2 -> pool 2x2 -> 4x64 output populations), ternary edge kernels
+in CAM synapse types, majority-rule readout, latency-to-decision report.
+
+Run: PYTHONPATH=src python examples/poker_dvs_cnn.py
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cnn import compile_poker_cnn
+from repro.core.event_engine import EventEngine
+from repro.core.neuron import NeuronParams
+
+SUITS = ["diamond(|)", "club(-)", "spade(^)", "heart(v)"]
+
+
+def symbol_events(symbol: int, n_events: int, rng, jitter: float = 1.0) -> np.ndarray:
+    """Synthetic DVS event cloud for one card flash (suit-specific edges)."""
+    if symbol == 0:
+        ys = rng.integers(6, 26, n_events)
+        xs = 15 + rng.normal(0, jitter, n_events)
+    elif symbol == 1:
+        xs = rng.integers(6, 26, n_events)
+        ys = 15 + rng.normal(0, jitter, n_events)
+    elif symbol == 2:
+        t = rng.uniform(-1, 1, n_events)
+        xs = 16 + t * 10 + rng.normal(0, jitter, n_events)
+        ys = 8 + np.abs(t) * 14
+    else:
+        t = rng.uniform(-1, 1, n_events)
+        xs = 16 + t * 10 + rng.normal(0, jitter, n_events)
+        ys = 24 - np.abs(t) * 14
+    return np.stack([np.clip(ys, 0, 31).astype(int), np.clip(xs, 0, 31).astype(int)], 1)
+
+
+def pool_activity(cc, eng, events, t_steps=40, drive=10.0):
+    act = cc.input_activity(events) / t_steps * drive
+    inp = jnp.broadcast_to(jnp.asarray(act), (t_steps, *act.shape))
+    _, spikes = eng.run(eng.init_state(), inp)
+    s = np.asarray(spikes)
+    return s[:, cc.pool[0]: cc.pool[1]].sum(0), s[:, cc.out[0]: cc.out[1]].reshape(t_steps, 4, -1)
+
+
+def main():
+    from repro.core.cnn import CnnConfig
+
+    rng = np.random.default_rng(7)
+    params = NeuronParams(refrac=1e-3, b_adapt=1e-3, input_gain=0.3,
+                          w_syn=(1.0, 3.0, 1.0, 1.0))
+
+    # ---- offline Hebbian readout tuning (paper §V): find the 64 pool
+    # neurons most selective for each class, wire them to its population ----
+    cc0 = compile_poker_cnn()
+    eng0 = EventEngine(cc0.tables, params)
+    print(f"Table-V network: {cc0.tables.n_neurons} neurons on {cc0.tables.n_clusters} cores")
+    acts = []
+    for sym in range(4):
+        a = np.zeros(256)
+        for _ in range(3):  # 3 training presentations per class
+            pa, _ = pool_activity(cc0, eng0, symbol_events(sym, 400, rng))
+            a += pa
+        acts.append(a)
+    acts = np.stack(acts)  # [4, 256]
+    selectivity = acts - acts.mean(0, keepdims=True)
+    fc_select = np.stack([np.argsort(-selectivity[c])[:64] for c in range(4)])
+    print("Hebbian-selected pool neurons per class:",
+          [int((fc_select[c] // 64 == c).sum()) for c in range(4)],
+          "(from own feature map)")
+
+    cc = compile_poker_cnn(CnnConfig(), fc_select=fc_select)
+    eng = EventEngine(cc.tables, params)
+
+    # ---- evaluation on fresh event streams --------------------------------
+    t_steps, trials = 40, 5
+    correct, latencies = 0, []
+    t0 = time.time()
+    eval_rng = np.random.default_rng(1234)
+    for trial in range(trials):
+        for sym in range(4):
+            _, out = pool_activity(cc, eng, symbol_events(sym, 400, eval_rng), t_steps)
+            counts = out.sum((0, 2))
+            pred = int(np.argmax(counts))
+            correct += pred == sym
+            cum = out.sum(2).cumsum(0)
+            lead = np.nonzero((cum.argmax(1) == sym) & (cum.max(1) > 2))[0]
+            latencies.append(int(lead[0]) + 1 if len(lead) else t_steps)
+            if trial == 0:
+                print(f"  {SUITS[sym]:12s} -> pred {SUITS[pred]:12s} counts={counts.astype(int)}")
+    n = trials * 4
+    print(f"\naccuracy: {correct}/{n} = {correct / n:.0%} (paper: 100% on the 4-suit task)")
+    print(f"mean decision latency: {np.mean(latencies):.1f} sim-steps "
+          f"(~{np.mean(latencies):.0f} ms at 1 ms/step; paper: <30 ms)")
+    print(f"wall time: {time.time() - t0:.1f}s for {n} presentations")
+
+
+if __name__ == "__main__":
+    main()

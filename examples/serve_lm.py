@@ -1,0 +1,57 @@
+"""Batched serving example (deliverable b): prefill + decode with ring-buffer
+KV caches, greedy + temperature sampling, throughput report.
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-27b]
+(all archs run via their smoke configs on CPU; serving semantics — cache
+layouts, window eviction, MLA absorbed decode — are identical to full scale.)
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.7)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n / 1e6:.2f}M params (smoke config of {args.arch})")
+
+    extras = None
+    if cfg.frontend == "audio_stub":
+        extras = {"frames": jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model), jnp.float32)}
+
+    for temp, label in ((0.0, "greedy"), (args.temperature, f"T={args.temperature}")):
+        eng = Engine(model, params, ServeConfig(max_len=args.prompt_len + args.max_new + 8,
+                                                temperature=temp))
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab, jnp.int32
+        )
+        t0 = time.time()
+        out = eng.generate(prompts, args.max_new, extras)
+        dt = time.time() - t0
+        print(f"[{label}] generated {out.shape[0]}x{out.shape[1]} tokens in {dt:.2f}s "
+              f"({out.size / dt:.0f} tok/s incl. compile)")
+        print("   first sequences:", out[0, :10].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Architecture registry: ``get_config(arch, smoke=False)`` + shape cells.
+
+The 10 assigned architectures plus the paper's own DYNAPs CNN (core/cnn.py
+owns that config). Shapes are the per-arch input-shape set from the
+assignment; ``cells()`` enumerates the 40 (arch x shape) dry-run cells with
+their applicability flags (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import BlockSpec, ModelConfig
+
+ARCHS = {
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "yi-34b": "repro.configs.yi_34b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "whisper-base": "repro.configs.whisper_base",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = (
+    Shape("train_4k", 4096, 256, "train"),
+    Shape("prefill_32k", 32768, 32, "prefill"),
+    Shape("decode_32k", 32768, 128, "decode"),
+    Shape("long_500k", 524288, 1, "decode"),
+)
+
+# archs allowed to run long_500k (sub-quadratic families; DESIGN.md §5)
+LONG_OK = {"zamba2-2.7b", "rwkv6-3b"}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.smoke() if smoke else mod.config()
+
+
+def cells():
+    """All 40 (arch, shape, runnable, skip_reason) dry-run cells."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            skip = None
+            if shape.name == "long_500k" and arch not in LONG_OK:
+                skip = "full-attention family: long_500k skipped per shape rules"
+            out.append((arch, shape, skip is None, skip))
+    return out
+
+
+__all__ = ["ARCHS", "SHAPES", "LONG_OK", "Shape", "ModelConfig", "BlockSpec", "get_config", "cells"]

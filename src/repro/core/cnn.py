@@ -1,0 +1,206 @@
+"""Spiking-CNN compiler for the poker-DVS experiment (paper §V, Table V).
+
+Maps the paper's three-layer event-driven CNN onto the two-stage routed
+fabric:
+
+  input 32x32 DVS events
+   -> conv: 4 kernels 8x8, stride 2      -> 4 x 16 x 16 feature maps
+   -> subsample 2x2 (pooling)            -> 4 x 8 x 8
+   -> fully connected (64 strongest)     -> 4 populations x 64 output neurons
+
+Mapping choices mirror the chip:
+
+* The CAM word is 10 bits -> K = 1024 tags per core (alpha = K/C = 4).
+* Input->conv uses *pixel-id tags*: tag(y, x) = y*32 + x, identical in every
+  feature-map cluster. Each conv neuron subscribes to the <=64 pixels of its
+  8x8 receptive field — exactly the 64 CAM words per neuron the chip provides.
+  Kernel weights are realized by synapse TYPE (2-bit SRAM): positive taps use
+  fast-exc DPI synapses, negative taps subtractive-inh; i.e. ternary kernels,
+  the quantization the 4-synapse-type hardware imposes.
+* conv->pool: the 4 conv neurons of a 2x2 field share one tag (weight
+  sharing via shared tags = the paper's mechanism for linear memory scaling).
+* pool->out: each class population subscribes to its 64 selected pool neurons
+  ("the 64 most active pooling neurons are strongly connected", §V) — again
+  exactly filling the 64-word CAM of each output neuron.
+
+One cluster = one core of 256 neurons: clusters 0-3 hold the feature maps,
+cluster 4 the pooling layer, cluster 5 the output populations (6 cores of the
+9-chip board; the paper used 2560 neurons including input relays).
+
+Input events are injected as external tag activity (the FPGA input path,
+Fig. 7): ``input_activity()`` converts DVS events into [n_clusters, K] drive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.tags import NetworkSpec, RoutingTables, SynapseType, compile_network
+
+__all__ = ["CnnConfig", "CompiledCnn", "compile_poker_cnn", "edge_kernels"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    input_hw: int = 32
+    n_kernels: int = 4
+    kernel: int = 8
+    stride: int = 2
+    conv_hw: int = 16  # stride-2 with padding 5 -> 16x16 output (paper Table V)
+    pool: int = 2
+    n_classes: int = 4
+    pop_per_class: int = 64
+    cluster_size: int = 256  # one DYNAPs core
+    k_tags: int = 1024  # 10-bit CAM tag field
+    max_cam_words: int = 64
+    max_sram_entries: int = 16
+
+
+@dataclasses.dataclass
+class CompiledCnn:
+    tables: RoutingTables
+    cfg: CnnConfig
+    # neuron index ranges [start, stop)
+    conv: tuple[int, int]
+    pool: tuple[int, int]
+    out: tuple[int, int]
+    conv_clusters: tuple[int, ...]
+
+    def input_activity(self, events_yx: np.ndarray) -> np.ndarray:
+        """DVS events [n_ev, 2] of (y, x) -> external tag activity [n_clusters, K]."""
+        c = self.cfg
+        a = np.zeros((self.tables.n_clusters, c.k_tags), dtype=np.float32)
+        if len(events_yx) == 0:
+            return a
+        tags = events_yx[:, 0].astype(np.int64) * c.input_hw + events_yx[:, 1]
+        counts = np.bincount(tags, minlength=c.input_hw * c.input_hw).astype(np.float32)
+        for cl in self.conv_clusters:
+            a[cl, : c.input_hw * c.input_hw] += counts
+        return a
+
+
+def edge_kernels(k: int = 8) -> np.ndarray:
+    """4 ternary oriented detectors [4,k,k] in {-1,0,+1} (§V: vertical,
+    horizontal edges; upward, downward vertices). Ternary because weights are
+    realized by synapse type on the chip."""
+    ks = np.zeros((4, k, k), dtype=np.float32)
+    half = k // 2
+    ks[0, :, half - 1 : half + 1] = 1.0  # vertical edge: center band +
+    ks[0, :, : half - 2], ks[0, :, half + 2 :] = -1.0, -1.0
+    ks[1] = ks[0].T  # horizontal edge
+    for y in range(k):
+        for x in range(k):
+            d = y - abs(x - half)
+            ks[2, y, x] = 1.0 if 0 <= d <= 1 else (-1.0 if d > 2 else 0.0)
+    ks[3] = ks[2, ::-1, :]  # downward vertex
+    return ks
+
+
+def compile_poker_cnn(cfg: CnnConfig = CnnConfig(), fc_select: np.ndarray | None = None):
+    """Build + compile the Table-V network.
+
+    ``fc_select``: [n_classes, <=64] pool-neuron indices feeding each class
+    population (the offline-Hebbian selection). Default: class c reads its own
+    feature map's 64 pool neurons.
+    """
+    c = cfg
+    n_conv = c.n_kernels * c.conv_hw * c.conv_hw  # 1024
+    pool_hw = c.conv_hw // c.pool
+    n_pool = c.n_kernels * pool_hw * pool_hw  # 256
+    n_out = c.n_classes * c.pop_per_class  # 256
+    n_neurons = n_conv + n_pool + n_out  # 1536 = 6 cores
+
+    spec = NetworkSpec(
+        n_neurons=n_neurons,
+        cluster_size=c.cluster_size,
+        k_tags=c.k_tags,
+        max_cam_words=c.max_cam_words,
+        max_sram_entries=c.max_sram_entries,
+    )
+
+    conv0, pool0, out0 = 0, n_conv, n_conv + n_pool
+    map_size = c.conv_hw * c.conv_hw  # 256 = one cluster per feature map
+    conv_clusters = tuple((conv0 + f * map_size) // c.cluster_size for f in range(c.n_kernels))
+
+    def conv_idx(f: int, y: int, x: int) -> int:
+        return conv0 + (f * c.conv_hw + y) * c.conv_hw + x
+
+    def pool_idx(f: int, y: int, x: int) -> int:
+        return pool0 + (f * pool_hw + y) * pool_hw + x
+
+    def out_idx(cls: int, i: int) -> int:
+        return out0 + cls * c.pop_per_class + i
+
+    # ---- conv -> pool (shared tag per 2x2 field) ---------------------------
+    for f in range(c.n_kernels):
+        for py in range(pool_hw):
+            for px in range(pool_hw):
+                srcs = [
+                    conv_idx(f, py * c.pool + dy, px * c.pool + dx)
+                    for dy in range(c.pool)
+                    for dx in range(c.pool)
+                ]
+                spec.connect_group(
+                    srcs, [(pool_idx(f, py, px), SynapseType.FAST_EXC)],
+                    shared_tag=True, copies=8,  # integer weight via repeated CAM words
+                )
+
+    # ---- pool -> output (64 selected sources per class) --------------------
+    if fc_select is None:
+        fc_select = np.arange(n_pool, dtype=np.int64).reshape(c.n_kernels, -1)[
+            : c.n_classes
+        ]  # class c <- feature map c's pool units
+    for cls in range(c.n_classes):
+        tgts = [(out_idx(cls, i), SynapseType.SLOW_EXC) for i in range(c.pop_per_class)]
+        for p in np.asarray(fc_select[cls]).ravel():
+            spec.connect_group([pool0 + int(p)], tgts, shared_tag=True)
+
+
+    tables = compile_network(spec)
+
+    # ---- input -> conv: splice pixel-id tags into conv CAMs ---------------
+    # (input pixels are external sources — they occupy tag space, not SRAM)
+    kernels = edge_kernels(c.kernel)
+    pad = (c.conv_hw * c.stride + c.kernel - c.stride - c.input_hw) // 2  # = 5
+    cam_tag = tables.cam_tag.copy()
+    cam_syn = tables.cam_syn.copy()
+    for f in range(c.n_kernels):
+        for y in range(c.conv_hw):
+            for x in range(c.conv_hw):
+                neuron = conv_idx(f, y, x)
+                entries = []
+                for ky in range(c.kernel):
+                    iy = y * c.stride - pad + ky
+                    if not (0 <= iy < c.input_hw):
+                        continue
+                    for kx in range(c.kernel):
+                        ix = x * c.stride - pad + kx
+                        if not (0 <= ix < c.input_hw):
+                            continue
+                        w = float(kernels[f, ky, kx])
+                        if w == 0.0:
+                            continue
+                        syn = SynapseType.FAST_EXC if w > 0 else SynapseType.SUB_INH
+                        entries.append((iy * c.input_hw + ix, syn))
+                row = cam_tag[neuron]
+                free = np.flatnonzero(row < 0)
+                if len(free) < len(entries):
+                    raise ValueError(
+                        f"CAM overflow at conv neuron {neuron}: "
+                        f"{len(entries)} taps > {len(free)} free words"
+                    )
+                for slot, (tag, syn) in zip(free, entries):
+                    cam_tag[neuron, slot] = tag
+                    cam_syn[neuron, slot] = syn
+    tables = dataclasses.replace(tables, cam_tag=cam_tag, cam_syn=cam_syn)
+
+    return CompiledCnn(
+        tables=tables,
+        cfg=c,
+        conv=(conv0, n_conv),
+        pool=(pool0, pool0 + n_pool),
+        out=(out0, out0 + n_out),
+        conv_clusters=conv_clusters,
+    )

@@ -1,0 +1,176 @@
+"""Analytical model of the hierarchical-mesh routing fabric (paper §III, §V).
+
+The prototype's QDI circuits are asynchronous; XLA programs are not. What we
+reproduce here is the paper's *quantitative* fabric model — hop counts,
+latency, energy, and bandwidth of the R1/R2/R3 hierarchy — as an explicit
+analytical model parameterized by the measured chip constants (Tables II/III).
+Benchmarks use it to regenerate Tables II-IV and the average-distance claim
+(hierarchy: sqrt(N)/3 vs flat mesh: 2*sqrt(N)/3).
+
+Geometry: a ``grid_x x grid_y`` 2D mesh of tiles (chips); each tile has
+``cores_per_tile`` cores behind one R2 tree and one R3 mesh router; each core
+has ``neurons_per_core`` neurons behind an R1 router.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["ChipConstants", "Fabric", "avg_distance_hierarchical", "avg_distance_mesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipConstants:
+    """Measured prototype constants (Tables II and III)."""
+
+    # Table II
+    broadcast_time_s: float = 27e-9  # CAM broadcast+search+handshake per core
+    latency_across_chip_s: float = 15.4e-9  # includes IO pads (measured)
+    r3_latency_s: float = 2.5e-9  # internal R3 hop (0.18um)
+    r3_throughput_eps: float = 400e6  # events/s per R3 router
+    io_in_eps: float = 30e6
+    io_out_eps: float = 21e6
+    lut_read_bps: float = 750e6
+    # Table III (energy per operation) keyed by core supply voltage
+    energy_j: dict = dataclasses.field(
+        default_factory=lambda: {
+            1.8: {
+                "spike": 883e-12,
+                "encode": 883e-12,
+                "broadcast": 6.84e-9,
+                "route_core": 360e-12,
+                "pulse_extend": 324e-12,
+            },
+            1.3: {
+                "spike": 260e-12,
+                "encode": 507e-12,
+                "broadcast": 2.2e-9,
+                "route_core": 78e-12,
+                "pulse_extend": 26e-12,
+            },
+        }
+    )
+    # Table IV
+    energy_per_hop_j: float = 17e-12  # @1.3V
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    grid_x: int = 3
+    grid_y: int = 3
+    cores_per_tile: int = 4
+    neurons_per_core: int = 256
+    constants: ChipConstants = dataclasses.field(default_factory=ChipConstants)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.grid_x * self.grid_y
+
+    @property
+    def n_cores(self) -> int:
+        return self.n_tiles * self.cores_per_tile
+
+    @property
+    def n_neurons(self) -> int:
+        return self.n_cores * self.neurons_per_core
+
+    # -- addressing ------------------------------------------------------
+    def tile_of_core(self, core: int) -> tuple[int, int]:
+        t = core // self.cores_per_tile
+        return t % self.grid_x, t // self.grid_x
+
+    def hops(self, src_core: int, dst_core: int) -> dict:
+        """Router traversals for one event src->dst (XY routing for R3)."""
+        sx, sy = self.tile_of_core(src_core)
+        dx, dy = self.tile_of_core(dst_core)
+        same_tile = (sx, sy) == (dx, dy)
+        same_core = same_tile and src_core == dst_core
+        mesh_hops = abs(sx - dx) + abs(sy - dy)
+        return {
+            "r1": 1 if same_core else 2,  # src R1 (+ dst R1 when leaving the core)
+            "r2": 0 if same_core else 2,  # up through src R2, down through dst R2
+            "r3": mesh_hops,
+            "broadcast": 1,  # destination-core CAM broadcast always happens
+        }
+
+    def latency_s(self, src_core: int, dst_core: int) -> float:
+        """Event latency along the hierarchy (analytical, Table II constants)."""
+        c, h = self.constants, self.hops(src_core, dst_core)
+        lat = h["broadcast"] * c.broadcast_time_s
+        lat += h["r3"] * c.latency_across_chip_s  # chip-to-chip traversal
+        # R1/R2 traversals are folded into broadcast + across-chip measurements
+        # on the prototype; model them at the internal R3 hop cost.
+        lat += (h["r1"] + h["r2"] - 2) * c.r3_latency_s if h["r2"] else 0.0
+        return lat
+
+    def energy_j(self, src_core: int, dst_core: int, vdd: float = 1.3) -> float:
+        """Energy for one spike delivered src_core -> dst_core (Table III)."""
+        e = self.constants.energy_j[vdd]
+        h = self.hops(src_core, dst_core)
+        total = e["spike"] + e["encode"] + e["broadcast"] + e["pulse_extend"]
+        if h["r2"]:
+            total += e["route_core"]
+        total += h["r3"] * self.constants.energy_per_hop_j
+        return total
+
+    # -- aggregate traffic -------------------------------------------------
+    def traffic(self, rates_hz: np.ndarray, dst_cores: list[list[int]]) -> dict:
+        """Router-level event load for per-core mean spike rates.
+
+        rates_hz[c]: summed neuron spike rate of core c;
+        dst_cores[c]: stage-1 destination cores of core c's neurons.
+        Returns events/s at each hierarchy level + utilization bounds.
+        """
+        c = self.constants
+        r1 = np.zeros(self.n_cores)
+        r3_total = 0.0
+        broadcasts = np.zeros(self.n_cores)
+        for src, dsts in enumerate(dst_cores):
+            for d in dsts:
+                h = self.hops(src, d)
+                r1[src] += rates_hz[src]
+                broadcasts[d] += rates_hz[src]
+                r3_total += rates_hz[src] * h["r3"]
+        bcast_limit = 1.0 / c.broadcast_time_s
+        return {
+            "r1_events_per_s": r1,
+            "broadcast_events_per_s": broadcasts,
+            "r3_events_per_s": r3_total,
+            "broadcast_utilization": broadcasts.max() / bcast_limit if len(broadcasts) else 0.0,
+            "r3_utilization": r3_total / (c.r3_throughput_eps * self.n_tiles),
+        }
+
+    def max_fan_in(self, rate_hz: float) -> float:
+        """Paper §V: fan-in supportable at a given mean rate.
+
+        Worst case (no source sharing): a core receives neurons_per_core * F
+        events/s; bounding by the 1/27ns ~ 37 Mevents/s broadcast bandwidth
+        gives F = bw / (256 * rate) — reproduces the paper's 7200 @ 20 Hz and
+        1400 @ 100 Hz (the paper rounds).
+        """
+        bandwidth = 1.0 / self.constants.broadcast_time_s
+        return bandwidth / (self.neurons_per_core * rate_hz)
+
+
+# ---------------------------------------------------------------------------
+# Average-distance scaling (Table IV)
+# ---------------------------------------------------------------------------
+def avg_distance_mesh(n_nodes: int) -> float:
+    """Flat 2D mesh: mean Manhattan distance ~ 2*sqrt(N)/3."""
+    side = int(np.ceil(np.sqrt(n_nodes)))
+    xs = np.arange(side)
+    d1 = np.abs(xs[:, None] - xs[None, :]).mean()  # mean |x1-x2| over a side
+    return 2.0 * d1
+
+
+def avg_distance_hierarchical(n_nodes: int, cluster: int = 4) -> float:
+    """Hierarchy concentrates local traffic: distance ~ sqrt(N)/3.
+
+    Model: fraction of traffic resolved below the mesh (R1/R2) contributes ~0
+    mesh hops; the rest traverses the (sqrt(N)/cluster-side) reduced mesh.
+    With 4 cores/tile the reduced mesh has N/4 nodes -> mean distance
+    2*sqrt(N/4)/3 = sqrt(N)/3, matching the paper's Table IV entry.
+    """
+    return avg_distance_mesh(max(1, n_nodes // cluster))

@@ -1,0 +1,242 @@
+"""Network compiler: connectivity -> two-stage routing tables (paper §II/§III).
+
+The compiler takes an abstract connectivity description (who talks to whom,
+with which synapse type) and emits the distributed routing state of the paper:
+
+  source (SRAM) table, one row per neuron  — stage-1 point-to-point entries
+      src_tag[i, e]  : tag id broadcast into the destination cluster
+      src_dest[i, e] : destination cluster id
+  target (CAM) table, one row per neuron   — stage-2 subscriptions
+      cam_tag[j, s]  : tag this neuron's synapse s is subscribed to
+      cam_syn[j, s]  : synapse type in {0: fast-exc, 1: slow-exc,
+                                        2: subtractive-inh, 3: shunting-inh}
+
+Tag semantics are exactly the paper's: an event (tag t -> cluster c) is
+broadcast to ALL neurons of cluster c and accepted by every CAM word matching
+t. Two sources sending the same tag to the same cluster are therefore
+indistinguishable at the destination; the compiler only merges sources onto a
+shared tag when the caller explicitly asks for it (population/weight-shared
+connections, as used by the spiking-CNN compiler) — otherwise every
+(source, cluster) pair gets a fresh tag, and exceeding K tags in any cluster
+is a compile error ("increase alpha or re-cluster", Appendix A).
+
+Compilation is host-side numpy; the result is a pytree of int32 arrays ready
+for the JAX event engine / Pallas CAM kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Iterable, Sequence
+
+import numpy as np
+
+__all__ = ["SynapseType", "NetworkSpec", "RoutingTables", "compile_network"]
+
+
+class SynapseType:
+    FAST_EXC = 0
+    SLOW_EXC = 1
+    SUB_INH = 2
+    SHUNT_INH = 3
+
+
+@dataclasses.dataclass
+class NetworkSpec:
+    """Mutable builder for an event-routed network.
+
+    Neurons are integers 0..n-1, statically grouped into clusters of size
+    ``cluster_size`` (cluster id = neuron // cluster_size, the "core").
+    """
+
+    n_neurons: int
+    cluster_size: int
+    k_tags: int  # K: tags per cluster (address space within a core)
+    max_cam_words: int = 64  # CAM words per neuron (paper prototype: 64)
+    max_sram_entries: int = 16  # stage-1 fan-out F/M per neuron
+
+    def __post_init__(self) -> None:
+        if self.n_neurons % self.cluster_size != 0:
+            raise ValueError("n_neurons must be a multiple of cluster_size")
+        # groups: (sources, {cluster: [(target, syn_type)]}, shared, copies)
+        self._groups: list = []
+
+    @property
+    def n_clusters(self) -> int:
+        return self.n_neurons // self.cluster_size
+
+    def cluster_of(self, neuron: int) -> int:
+        return neuron // self.cluster_size
+
+    # ------------------------------------------------------------------ API
+    def connect(self, src: int, dst: int, syn_type: int = SynapseType.FAST_EXC,
+                copies: int = 1) -> None:
+        """Point connection: one source, one destination synapse."""
+        self.connect_group([src], [(dst, syn_type)], shared_tag=False, copies=copies)
+
+    def connect_one_to_many(
+        self, src: int, dsts: Sequence[int], syn_type: int = SynapseType.FAST_EXC
+    ) -> None:
+        self.connect_group([src], [(d, syn_type) for d in dsts], shared_tag=False)
+
+    def connect_group(
+        self,
+        sources: Iterable[int],
+        targets: Iterable[tuple[int, int]],
+        shared_tag: bool = True,
+        copies: int = 1,
+    ) -> None:
+        """Connect every source to every (target, syn_type).
+
+        ``shared_tag=True`` makes all sources of the group share one tag per
+        destination cluster (population / weight-shared connectivity — the
+        paper's mechanism for keeping K constant in clustered networks).
+        With ``shared_tag=False`` each source gets its own tag per cluster.
+        ``copies`` programs the same tag into several CAM words of each
+        target — the chip's way of realizing integer synaptic weights
+        (each match fires that many pulse generators).
+        """
+        by_cluster: dict[int, list[tuple[int, int]]] = defaultdict(list)
+        for dst, syn in targets:
+            if not (0 <= dst < self.n_neurons):
+                raise ValueError(f"target {dst} out of range")
+            by_cluster[self.cluster_of(dst)].append((dst, int(syn)))
+        srcs = tuple(sorted(set(int(s) for s in sources)))
+        for s in srcs:
+            if not (0 <= s < self.n_neurons):
+                raise ValueError(f"source {s} out of range")
+        self._groups.append((srcs, dict(by_cluster), bool(shared_tag), int(copies)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingTables:
+    """Compiled two-stage routing state (numpy int32; -1 = empty slot)."""
+
+    src_tag: np.ndarray  # [N, E]
+    src_dest: np.ndarray  # [N, E]
+    cam_tag: np.ndarray  # [N, S]
+    cam_syn: np.ndarray  # [N, S]  (valid only where cam_tag >= 0)
+    cluster_size: int
+    k_tags: int
+
+    @property
+    def n_neurons(self) -> int:
+        return self.src_tag.shape[0]
+
+    @property
+    def n_clusters(self) -> int:
+        return self.n_neurons // self.cluster_size
+
+    # -- paper bookkeeping -------------------------------------------------
+    def sram_bits(self) -> int:
+        """Occupied source-memory bits: entries * (log2 K + log2 n_clusters)."""
+        ent = int((self.src_tag >= 0).sum())
+        word = int(np.ceil(np.log2(max(2, self.k_tags)))) + int(
+            np.ceil(np.log2(max(2, self.n_clusters)))
+        )
+        return ent * word
+
+    def cam_bits(self) -> int:
+        """Occupied target-memory bits: CAM words * (log2 K + 2 syn-type bits)."""
+        ent = int((self.cam_tag >= 0).sum())
+        return ent * (int(np.ceil(np.log2(max(2, self.k_tags)))) + 2)
+
+    def dense_equivalent(self) -> np.ndarray:
+        """Reference fan-out expansion: [n_connections, 3] rows (src, dst, syn).
+
+        Semantics-faithful: a (src -> tag@cluster) entry reaches EVERY neuron
+        of that cluster whose CAM holds the tag. Used as the oracle in tests.
+        """
+        n, e = self.src_tag.shape
+        rows: list[tuple[int, int, int]] = []
+        # cluster -> tag -> [(neuron, syn)]
+        subs: dict[tuple[int, int], list[tuple[int, int]]] = defaultdict(list)
+        for j in range(n):
+            cl = j // self.cluster_size
+            for s in range(self.cam_tag.shape[1]):
+                t = int(self.cam_tag[j, s])
+                if t >= 0:
+                    subs[(cl, t)].append((j, int(self.cam_syn[j, s])))
+        for i in range(n):
+            for k in range(e):
+                t = int(self.src_tag[i, k])
+                if t < 0:
+                    continue
+                cl = int(self.src_dest[i, k])
+                for j, syn in subs[(cl, t)]:
+                    rows.append((i, j, syn))
+        return np.asarray(sorted(rows), dtype=np.int32).reshape(-1, 3)
+
+
+def compile_network(spec: NetworkSpec) -> RoutingTables:
+    """Greedy tag allocation (paper Appendix A: 'tag re-assignment')."""
+    n = spec.n_neurons
+    src_entries: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # (tag, cluster)
+    cam_entries: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # (tag, syn)
+    next_tag = np.zeros(spec.n_clusters, dtype=np.int64)
+
+    def alloc_tag(cluster: int) -> int:
+        t = int(next_tag[cluster])
+        if t >= spec.k_tags:
+            raise ValueError(
+                f"tag overflow in cluster {cluster}: K={spec.k_tags} exhausted; "
+                "increase alpha (more tags) or re-cluster the network (Appendix A)"
+            )
+        next_tag[cluster] += 1
+        return t
+
+    for srcs, by_cluster, shared, copies in spec._groups:
+        for cluster, tgts in sorted(by_cluster.items()):
+            if shared:
+                tags_for_src = {s: None for s in srcs}
+                tag = alloc_tag(cluster)
+                for s in srcs:
+                    tags_for_src[s] = tag
+            else:
+                tags_for_src = {s: alloc_tag(cluster) for s in srcs}
+            # stage-1 entries (dedupe per (src, cluster, tag))
+            for s in srcs:
+                entry = (tags_for_src[s], cluster)
+                if entry not in src_entries[s]:
+                    src_entries[s].append(entry)
+                    if len(src_entries[s]) > spec.max_sram_entries:
+                        raise ValueError(
+                            f"source {s}: stage-1 fan-out exceeds F/M="
+                            f"{spec.max_sram_entries} SRAM entries"
+                        )
+            # stage-2 subscriptions
+            if shared:
+                uniq_tags = sorted(set(tags_for_src.values()))
+            else:
+                uniq_tags = sorted(tags_for_src.values())
+            for dst, syn in tgts:
+                for t in uniq_tags:
+                    for _ in range(copies):
+                        cam_entries[dst].append((t, syn))
+                    if len(cam_entries[dst]) > spec.max_cam_words:
+                        raise ValueError(
+                            f"neuron {dst}: CAM capacity {spec.max_cam_words} exceeded"
+                        )
+
+    e, s_ = spec.max_sram_entries, spec.max_cam_words
+    src_tag = np.full((n, e), -1, dtype=np.int32)
+    src_dest = np.full((n, e), -1, dtype=np.int32)
+    cam_tag = np.full((n, s_), -1, dtype=np.int32)
+    cam_syn = np.zeros((n, s_), dtype=np.int32)
+    for i, entries in enumerate(src_entries):
+        for k, (t, c) in enumerate(entries):
+            src_tag[i, k] = t
+            src_dest[i, k] = c
+    for j, entries in enumerate(cam_entries):
+        for k, (t, syn) in enumerate(entries):
+            cam_tag[j, k] = t
+            cam_syn[j, k] = syn
+    return RoutingTables(
+        src_tag=src_tag,
+        src_dest=src_dest,
+        cam_tag=cam_tag,
+        cam_syn=cam_syn,
+        cluster_size=spec.cluster_size,
+        k_tags=spec.k_tags,
+    )

@@ -1,0 +1,104 @@
+"""Generic two-stage tag dispatch in JAX (the paper's §II scheme, executable).
+
+Stage 1 (point-to-point, "R1-SRAM -> fabric"): every active source emits its
+stage-1 entries ``(tag, dest_cluster)``; all events are accumulated into a
+tag-activity matrix ``A[n_clusters, K]`` — entry ``A[c, t]`` is the summed
+event weight arriving at cluster ``c`` under tag ``t`` this step. On hardware
+this is the SRAM memory-address loop + mesh routing; on TPU it is a
+scatter-add, and across devices a reduce-scatter over the cluster axis
+(each device owns a contiguous slab of clusters = "cores").
+
+Stage 2 (broadcast + CAM match, "R1 -> core"): each cluster broadcasts its
+activity row to all member neurons; every CAM word that matches contributes
+its event weight to the synapse-type accumulator of its neuron. This is the
+compute hot-spot and has a Pallas kernel (kernels/cam_match); the functions
+here are the pure-jnp implementations used as reference and CPU fallback.
+
+The same two functions implement MoE dispatch in models/moe.py:
+clusters = expert groups, tags = expert ids, CAM subscription = expert
+residency. See DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["stage1_route", "stage2_cam_match", "two_stage_deliver", "N_SYN_TYPES"]
+
+N_SYN_TYPES = 4  # fast-exc, slow-exc, subtractive-inh, shunting-inh
+
+
+def stage1_route(
+    spikes: jax.Array,  # [N] float event weights (0/1 spikes or rates)
+    src_tag: jax.Array,  # [N, E] int32, -1 = empty
+    src_dest: jax.Array,  # [N, E] int32 cluster ids
+    n_clusters: int,
+    k_tags: int,
+) -> jax.Array:
+    """Scatter stage-1 events into the tag-activity matrix ``A[n_clusters, K]``."""
+    valid = src_tag >= 0
+    # flat index into A; invalid entries are routed out of range and dropped.
+    flat = jnp.where(valid, src_dest * k_tags + src_tag, n_clusters * k_tags)
+    weights = spikes[:, None] * valid.astype(spikes.dtype)
+    a = jnp.zeros((n_clusters * k_tags,), dtype=spikes.dtype)
+    a = a.at[flat.reshape(-1)].add(weights.reshape(-1), mode="drop")
+    return a.reshape(n_clusters, k_tags)
+
+
+def stage2_cam_match(
+    activity: jax.Array,  # [n_clusters, K]
+    cam_tag: jax.Array,  # [N, S] int32, -1 = empty
+    cam_syn: jax.Array,  # [N, S] int32 in [0, N_SYN_TYPES)
+    cluster_size: int,
+) -> jax.Array:
+    """Broadcast + CAM match: returns synaptic drive ``I[N, N_SYN_TYPES]``.
+
+    Pure-jnp reference; the Pallas kernel in kernels/cam_match computes the
+    same quantity blocked over (cluster, neuron-tile) with the activity row
+    pinned in VMEM.
+    """
+    n, s = cam_tag.shape
+    n_clusters, k = activity.shape
+    assert n == n_clusters * cluster_size, (n, n_clusters, cluster_size)
+    # [n_clusters, C, S] view of the CAM; gather each cluster's activity row.
+    tags = cam_tag.reshape(n_clusters, cluster_size, s)
+    valid = tags >= 0
+    vals = jnp.take_along_axis(
+        activity[:, None, :].repeat(cluster_size, axis=1),
+        jnp.clip(tags, 0, k - 1),
+        axis=2,
+    )
+    vals = jnp.where(valid, vals, 0.0)  # [n_clusters, C, S]
+    syn = cam_syn.reshape(n_clusters, cluster_size, s)
+    onehot = jax.nn.one_hot(syn, N_SYN_TYPES, dtype=vals.dtype)  # [.., S, T]
+    out = jnp.einsum("ncs,ncst->nct", vals, onehot)
+    return out.reshape(n, N_SYN_TYPES)
+
+
+def two_stage_deliver(
+    spikes: jax.Array,
+    src_tag: jax.Array,
+    src_dest: jax.Array,
+    cam_tag: jax.Array,
+    cam_syn: jax.Array,
+    cluster_size: int,
+    k_tags: int,
+    external_activity: jax.Array | None = None,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Full event delivery: spikes -> synaptic drive per neuron & synapse type.
+
+    ``external_activity`` injects input events (the chip's Input Interface /
+    FPGA path) directly as tag activity.
+    """
+    n = spikes.shape[0]
+    n_clusters = n // cluster_size
+    a = stage1_route(spikes, src_tag, src_dest, n_clusters, k_tags)
+    if external_activity is not None:
+        a = a + external_activity
+    if use_kernel:
+        from repro.kernels.cam_match import ops as cam_ops
+
+        return cam_ops.cam_match(a, cam_tag, cam_syn, cluster_size)
+    return stage2_cam_match(a, cam_tag, cam_syn, cluster_size)

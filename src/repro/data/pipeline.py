@@ -1,0 +1,84 @@
+"""Deterministic, resumable, sharded token pipeline.
+
+Two sources behind one interface:
+
+* ``SyntheticSource``: counter-based PRNG token stream (threefry on
+  (seed, step, shard)) — fully deterministic, O(1) state, used by smoke
+  tests, examples and the dry-run's input_specs sanity path.
+* ``FileSource``: memory-mapped flat token file (uint16/uint32), strided by
+  (host, step) — restart-safe because the cursor is derived from the step
+  counter, never from consumed state.
+
+Determinism + statelessness is the fault-tolerance story: a restarted (or
+re-elasticized) job continues from ``step`` with byte-identical batches; no
+shuffle buffers to rebuild.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    path: str | None = None  # file-backed when set
+    token_dtype: str = "uint16"
+
+
+class SyntheticSource:
+    """Stateless synthetic LM data: batch(step) is a pure function."""
+
+    def __init__(self, cfg: DataConfig, host_id: int = 0, n_hosts: int = 1):
+        self.cfg = cfg
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        assert cfg.global_batch % n_hosts == 0
+        self.local_batch = cfg.global_batch // n_hosts
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), self.host_id
+        )
+        toks = jax.random.randint(
+            key, (self.local_batch, cfg.seq_len + 1), 0, cfg.vocab, dtype=np.int32
+        )
+        toks = np.asarray(toks)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+        }
+
+
+class FileSource:
+    """Flat-token-file source; cursor = f(step), never mutable state."""
+
+    def __init__(self, cfg: DataConfig, host_id: int = 0, n_hosts: int = 1):
+        self.cfg = cfg
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.local_batch = cfg.global_batch // n_hosts
+        self.tokens = np.memmap(cfg.path, dtype=np.dtype(cfg.token_dtype), mode="r")
+        self.n_tokens = len(self.tokens)
+        self.samples = self.n_tokens // (cfg.seq_len + 1)
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        sl = cfg.seq_len + 1
+        base = step * cfg.global_batch + self.host_id * self.local_batch
+        idx = (base + np.arange(self.local_batch)) % self.samples
+        rows = np.stack([self.tokens[i * sl : (i + 1) * sl] for i in idx]).astype(np.int32)
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+def make_source(cfg: DataConfig, host_id: int = 0, n_hosts: int = 1):
+    if cfg.path:
+        return FileSource(cfg, host_id, n_hosts)
+    return SyntheticSource(cfg, host_id, n_hosts)

@@ -1,0 +1,57 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Scenario (DESIGN.md §6): a pod is lost mid-run. The supervisor restarts on
+the surviving mesh — e.g. (2,16,16) -> (1,16,16) — restores the latest
+checkpoint with ``Checkpointer.restore(shardings=remesh(...))`` and continues
+with the data-parallel degree halved (global batch either halved or held via
+2x microbatching; the deterministic pipeline keys batches by step, so the
+token stream stays consistent).
+
+``remesh_pspecs`` re-resolves every parameter's logical axes against the new
+mesh — because resolution is pure (priority + divisibility), the same params
+land on valid shardings for any mesh shape.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed import sharding as shd
+
+
+def remesh_pspecs(model, params_shapes, new_mesh: Mesh):
+    """Resolve the model's param spec tree against a new mesh."""
+    spec_tree = model.param_specs()
+    stack_specs = spec_tree["stack"]
+
+    def build(tree, shapes, prefix_none=0):
+        return shd.tree_pspecs(tree, shapes, new_mesh, prefix_none=prefix_none)
+
+    out = {}
+    for k, sub in spec_tree.items():
+        if k == "stack":
+            sub_out = {}
+            for name, blk in sub.items():
+                pn = 1 if name == "periods" else 0
+                sub_out[name] = build(blk, params_shapes["stack"][name], prefix_none=pn)
+            out[k] = sub_out
+        else:
+            out[k] = build(sub, params_shapes[k])
+    return out
+
+
+def reshard_state(state, pspec_tree_params, new_mesh: Mesh):
+    """device_put an in-memory state onto the new mesh (for live migration;
+    checkpoint-restore covers the crash path)."""
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    params = jax.tree.map(put, state["params"], pspec_tree_params)
+    # optimizer moments follow their parameter's sharding; scalars replicate
+    def put_like(x):
+        return jax.device_put(x)
+
+    opt = jax.tree.map(put_like, state["opt"])
+    return {"params": params, "opt": opt}

@@ -1,0 +1,232 @@
+"""Logical-axis -> PartitionSpec resolution.
+
+Models annotate every parameter with logical axis names ("embed", "heads",
+"mlp", "experts", ...). This module resolves those names against a concrete
+mesh with a *priority + divisibility* policy: each logical name carries an
+ordered list of candidate mesh axes; the resolver assigns the first candidate
+whose size divides the dimension and whose mesh axes are still unused in that
+tensor. Tensors whose preferred dim is not divisible fall back gracefully
+(e.g. yi-34b's 56 heads on a 16-way model axis -> shard the embed dim
+instead, row-parallel), so every architecture shards without special-casing.
+
+Expert tensors prefer the widest mesh ("data"+"model" jointly = in-pod EP256
+for deepseek-v3) and fall back to "model" only (EP16) — the pod axis never
+carries expert shards, mirroring the paper's locality hierarchy (events
+resolved inside a tile stay off the R3 mesh).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ordered candidates per logical axis name; each candidate is a mesh-axis
+# name or a tuple of names (sharded over their product).
+RULES: dict[str, tuple] = {
+    "experts": (("data", "model"), "model", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "heads_flat": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "vocab_in": (),
+    "inner": ("model",),
+    "ssm_heads": ("model",),
+    "embed": ("model",),  # used only as fallback via priority ordering
+    "kv_lora": (),
+    "q_lora": (),
+    "head_dim": (),
+    "embed_out": (),
+}
+
+# resolution priority: lower = claimed first
+PRIORITY = {
+    "experts": 0,
+    "heads": 1,
+    "kv_heads": 1,
+    "heads_flat": 1,
+    "mlp": 1,
+    "vocab": 1,
+    "inner": 1,
+    "ssm_heads": 1,
+    "embed": 5,
+}
+
+# activation / input logical axes
+BATCH_AXES = ("pod", "data")
+SEQ_AXES = ("data",)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0  # axis absent from this mesh -> candidate unusable
+        size *= mesh.shape[a]
+    return size
+
+
+def _flat_axes(axes):
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def resolve(logical: tuple, shape: tuple, mesh: Mesh) -> P:
+    """One tensor: logical axis names + concrete shape -> PartitionSpec."""
+    assert len(logical) == len(shape), (logical, shape)
+    assignment: list = [None] * len(logical)
+    used: set[str] = set()
+    order = sorted(
+        range(len(logical)),
+        key=lambda i: PRIORITY.get(logical[i] or "", 9),
+    )
+    total_elems = 1
+    for d in shape:
+        total_elems *= int(d)
+    for i in order:
+        name = logical[i]
+        if name is None:
+            continue
+        if name == "embed" and total_elems < EMBED_FALLBACK_MIN_ELEMS:
+            # replicating a small weight beats row-parallel all-reduces
+            continue
+        for cand in RULES.get(name, ()):
+            size = _axes_size(mesh, cand)
+            flat = _flat_axes(cand)
+            if size > 1 and shape[i] % size == 0 and not (set(flat) & used):
+                assignment[i] = cand
+                used.update(flat)
+                break
+    return P(*assignment)
+
+
+def tree_pspecs(spec_tree: Any, params_shape_tree: Any, mesh: Mesh, prefix_none: int = 0):
+    """Resolve a whole spec tree against a shape tree (jax.eval_shape output).
+
+    ``prefix_none`` prepends unsharded leading dims (the stacked-period axis).
+    """
+
+    def _one(spec, shaped):
+        logical = (None,) * prefix_none + tuple(spec)
+        return resolve(logical, shaped.shape, mesh)
+
+    return jax.tree.map(_one, spec_tree, params_shape_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_pspec(global_batch: int, mesh: Mesh) -> P:
+    """Shard the batch dim over as many of (pod, data) as divide it."""
+    axes = [a for a in BATCH_AXES if a in mesh.shape]
+    while axes and global_batch % int(np.prod([mesh.shape[a] for a in axes])) != 0:
+        axes.pop(0)
+    return P(tuple(axes) if axes else None)
+
+
+def token_pspec(global_batch: int, seq: int, mesh: Mesh) -> P:
+    bspec = batch_pspec(global_batch, mesh)
+    b_axes = bspec[0]
+    used = set(_flat_axes(b_axes)) if b_axes else set()
+    seq_axes = [a for a in SEQ_AXES if a in mesh.shape and a not in used and seq % mesh.shape[a] == 0]
+    return P(b_axes, seq_axes[0] if seq_axes else None)
+
+
+def cache_pspec(shape: tuple, kind: tuple, mesh: Mesh) -> P:
+    """KV-cache style tensors: kind names each dim from
+    {"batch","seq","kv_heads","heads","head_dim","state",None}."""
+    assignment: list = [None] * len(shape)
+    used: set[str] = set()
+    for i, (name, dim) in enumerate(zip(kind, shape)):
+        if name == "batch":
+            axes = [a for a in BATCH_AXES if a in mesh.shape and a not in used]
+            while axes and dim % int(np.prod([mesh.shape[a] for a in axes])) != 0:
+                axes.pop(0)
+            if axes:
+                assignment[i] = tuple(axes)
+                used.update(axes)
+        elif name == "seq":
+            for a in SEQ_AXES:
+                if a in mesh.shape and a not in used and dim % mesh.shape[a] == 0:
+                    assignment[i] = a
+                    used.add(a)
+                    break
+        elif name in ("kv_heads", "heads", "state"):
+            if "model" not in used and "model" in mesh.shape and dim % mesh.shape["model"] == 0:
+                assignment[i] = "model"
+                used.add("model")
+    return P(*assignment)
+
+
+def named(mesh: Mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (perf: pin layouts GSPMD would otherwise
+# lose through scan/reshape chains — see EXPERIMENTS.md §Perf iteration A1)
+# ---------------------------------------------------------------------------
+import contextlib
+
+_ACTIVE_MESH: list = [None]
+
+# minimum tensor size (elements) for the row-parallel "embed" fallback; below
+# this, replicating the weight beats per-matmul all-reduces (gemma3-1b/glm4
+# small-head attention — §Perf iteration B1).
+EMBED_FALLBACK_MIN_ELEMS = 2**25
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh):
+    """Enable with-sharding-constraints on activations while tracing."""
+    _ACTIVE_MESH.append(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE_MESH.pop()
+
+
+def active_axis_size(name: str) -> int:
+    mesh = _ACTIVE_MESH[-1]
+    return int(mesh.shape.get(name, 0)) if mesh is not None else 0
+
+
+def constrain(x, dims: tuple):
+    """Pin ``x`` to a layout. ``dims`` entries: "batch" (pod+data), "seq"
+    (data), "model" (heads/vocab/mlp dim), a mesh-axis tuple, or None.
+    No-op without an active mesh; skips non-divisible/absent axes."""
+    mesh = _ACTIVE_MESH[-1]
+    if mesh is None:
+        return x
+    spec: list = []
+    used: set[str] = set()
+    for name, dim in zip(dims, x.shape):
+        entry = None
+        if name is None:
+            spec.append(None)
+            continue
+        if name == "batch":
+            axes = [a for a in BATCH_AXES if a in mesh.shape and a not in used]
+            while axes and dim % int(np.prod([mesh.shape[a] for a in axes])) != 0:
+                axes.pop(0)
+            if axes:
+                entry = tuple(axes) if len(axes) > 1 else axes[0]
+        elif name == "seq":
+            for a in SEQ_AXES:
+                if a in mesh.shape and a not in used and dim % mesh.shape[a] == 0:
+                    entry = a
+                    break
+        else:
+            cands = (name,) if isinstance(name, str) else tuple(name)
+            flat = tuple(c for c in cands)
+            if all(a in mesh.shape for a in flat) and not (set(flat) & used):
+                size = int(np.prod([mesh.shape[a] for a in flat]))
+                if size > 1 and dim % size == 0:
+                    entry = flat if len(flat) > 1 else flat[0]
+        if entry is not None:
+            used.update((entry,) if isinstance(entry, str) else entry)
+        spec.append(entry)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the stage-2 CAM match.
+
+TPU-native rethink of the chip's CAM core (DESIGN.md §8): the hardware
+performs a *parallel compare* of an incoming 10-bit tag against all 64 CAM
+words of all 256 neurons in the core simultaneously (pre-charged match
+lines). The TPU analogue of "compare one word against everything at once" is
+a one-hot compare matrix contracted on the MXU:
+
+    match[c, s, k] = (cam_tag[c, s] == k)            # the CAM compare plane
+    vals[c, s]     = sum_k match[c, s, k] * A[k]     # match-line AND activity
+    drive[c, t]    = sum_s vals[c, s] * (cam_syn[c, s] == t)
+
+The kernel processes one cluster's activity row per grid step (pinned in
+VMEM — the "broadcast within the core"), tiling neurons so the compare plane
+(block_c * S * K floats) stays within VMEM. All events of a timestep that
+target one core are therefore resolved against VMEM-resident state, exactly
+the paper's "CAM cells of different cores operate in parallel" argument.
+
+Block shapes: K and S should be multiples of 128 on real hardware for MXU
+alignment; interpret mode (CPU validation) accepts any shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_SYN_TYPES = 4
+
+
+def _cam_match_kernel(activity_ref, tag_ref, syn_ref, out_ref, *, k_tags: int):
+    # activity_ref: [1, K]      — this cluster's broadcast tag activity
+    # tag_ref:      [1, Cb, S]  — CAM tags of the neuron tile
+    # syn_ref:      [1, Cb, S]  — synapse types of the neuron tile
+    # out_ref:      [1, Cb, 4]  — per-type synaptic drive
+    a = activity_ref[0, :]  # [K]
+    tags = tag_ref[0]  # [Cb, S] int32
+    syn = syn_ref[0]  # [Cb, S] int32
+    cb, s = tags.shape
+
+    valid = tags >= 0
+    # CAM compare plane: [Cb, S, K] one-hot (the parallel match-line search).
+    kk = jax.lax.broadcasted_iota(jnp.int32, (cb, s, k_tags), 2)
+    match = (tags[:, :, None] == kk).astype(a.dtype)
+    # match-line x activity: contract K on the MXU.
+    vals = jax.lax.dot_general(
+        match.reshape(cb * s, k_tags),
+        a.reshape(k_tags, 1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(cb, s)
+    vals = jnp.where(valid, vals, 0.0)
+    # accumulate into the 4 synapse-type lines (pulse-decoder DECs).
+    tt = jax.lax.broadcasted_iota(jnp.int32, (cb, s, N_SYN_TYPES), 2)
+    syn1h = (syn[:, :, None] == tt).astype(vals.dtype)
+    drive = jax.lax.dot_general(
+        vals.reshape(cb, 1, s),
+        syn1h,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).reshape(cb, N_SYN_TYPES)
+    out_ref[0] = drive.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cluster_size", "block_c", "interpret"))
+def cam_match_pallas(
+    activity: jax.Array,  # [n_clusters, K]
+    cam_tag: jax.Array,  # [N, S]
+    cam_syn: jax.Array,  # [N, S]
+    cluster_size: int,
+    block_c: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    n, s = cam_tag.shape
+    n_clusters, k = activity.shape
+    assert n == n_clusters * cluster_size
+    block_c = min(block_c, cluster_size)
+    assert cluster_size % block_c == 0, (cluster_size, block_c)
+
+    tags3 = cam_tag.reshape(n_clusters, cluster_size, s)
+    syn3 = cam_syn.reshape(n_clusters, cluster_size, s)
+    grid = (n_clusters, cluster_size // block_c)
+
+    out = pl.pallas_call(
+        functools.partial(_cam_match_kernel, k_tags=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c, s), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, N_SYN_TYPES), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_clusters, cluster_size, N_SYN_TYPES), activity.dtype),
+        interpret=interpret,
+    )(activity, tags3, syn3)
+    return out.reshape(n, N_SYN_TYPES)

@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for the CAM-match kernel.
+
+Chooses kernel vs reference by platform: the Pallas kernel targets TPU; on
+CPU we validate it in interpret mode (slow) and default to the jnp oracle
+for actual compute unless ``force_kernel`` is set.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cam_match.cam_match import cam_match_pallas
+from repro.kernels.cam_match.ref import cam_match_ref
+
+
+def cam_match(
+    activity: jax.Array,
+    cam_tag: jax.Array,
+    cam_syn: jax.Array,
+    cluster_size: int,
+    force_kernel: bool = False,
+    block_c: int = 16,
+) -> jax.Array:
+    platform = jax.default_backend()
+    if platform == "tpu":
+        return cam_match_pallas(
+            activity, cam_tag, cam_syn, cluster_size, block_c=block_c, interpret=False
+        )
+    if force_kernel:  # CPU validation path (interpret mode)
+        return cam_match_pallas(
+            activity, cam_tag, cam_syn, cluster_size, block_c=block_c, interpret=True
+        )
+    return cam_match_ref(activity, cam_tag, cam_syn, cluster_size)

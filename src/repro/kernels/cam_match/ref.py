@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the stage-2 CAM match (no Pallas).
+
+Semantics (paper §III-B / §IV-B): for every neuron ``n`` in cluster ``c`` and
+every CAM word ``s``:
+
+    drive[n, t] = sum_s  activity[c, cam_tag[n, s]] * [cam_syn[n, s] == t]
+
+with empty CAM words (``cam_tag < 0``) contributing nothing. This is the
+"broadcast the event to all nodes of the core; every matching CAM word fires
+its pulse generator" operation, summed over one timestep's worth of events
+(``activity[c, k]`` = number/weight of events with tag ``k`` delivered to
+cluster ``c``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_SYN_TYPES = 4
+
+
+def cam_match_ref(
+    activity: jax.Array,  # [n_clusters, K] float
+    cam_tag: jax.Array,  # [N, S] int32, -1 empty
+    cam_syn: jax.Array,  # [N, S] int32 in [0, 4)
+    cluster_size: int,
+) -> jax.Array:  # [N, 4] same dtype as activity
+    n, s = cam_tag.shape
+    n_clusters, k = activity.shape
+    assert n == n_clusters * cluster_size
+    tags = cam_tag.reshape(n_clusters, cluster_size, s)
+    valid = tags >= 0
+    rows = activity[:, None, :]  # [n_clusters, 1, K]
+    vals = jnp.take_along_axis(
+        jnp.broadcast_to(rows, (n_clusters, cluster_size, k)),
+        jnp.clip(tags, 0, k - 1),
+        axis=2,
+    )
+    vals = jnp.where(valid, vals, jnp.zeros((), activity.dtype))
+    syn = cam_syn.reshape(n_clusters, cluster_size, s)
+    onehot = jax.nn.one_hot(syn, N_SYN_TYPES, dtype=activity.dtype)
+    return jnp.einsum("ncs,ncst->nct", vals, onehot).reshape(n, N_SYN_TYPES)

@@ -1,0 +1,17 @@
+"""jit'd wrapper for the RWKV6 chunk kernel (platform dispatch)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6.ref import rwkv6_chunk_ref
+from repro.kernels.rwkv6.rwkv6 import rwkv6_chunk_pallas
+
+
+def rwkv6_chunk(r, k, v, log_w, u, s0, force_kernel: bool = False):
+    platform = jax.default_backend()
+    if platform == "tpu":
+        return rwkv6_chunk_pallas(r, k, v, log_w, u, s0, interpret=False)
+    if force_kernel:
+        return rwkv6_chunk_pallas(r, k, v, log_w, u, s0, interpret=True)
+    return rwkv6_chunk_ref(r, k, v, log_w, u, s0)

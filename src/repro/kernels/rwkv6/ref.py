@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for one RWKV6 chunk step (re-export of the model's ref).
+
+Kept as a separate module so the kernel test sweep depends only on
+kernels/rwkv6, mirroring the cam_match layout.
+"""
+
+from repro.models.rwkv import rwkv6_chunk_ref
+
+__all__ = ["rwkv6_chunk_ref"]

@@ -1,0 +1,273 @@
+"""Roofline cost extraction: analytic jaxpr walker + trip-count-corrected HLO.
+
+Why two mechanisms (both reported in EXPERIMENTS.md §Roofline):
+
+* ``compiled.cost_analysis()`` counts a ``while`` body ONCE — a 58-period
+  scan under-reports FLOPs ~58x (verified in-repo; see EXPERIMENTS.md
+  §Dry-run "measurement notes"). So compute/memory terms come from
+  ``jaxpr_cost``: an exact walker over the lowered jaxpr that multiplies
+  scan bodies by their trip count, recurses into pjit/remat/shard_map, and
+  counts dot_general/conv FLOPs from shapes. Remat recompute is visible in
+  the grad jaxpr, so the "wasted recompute" ratio MODEL_FLOPS/HLO_FLOPS is
+  preserved.
+* Memory bytes: a fusion-aware *estimate* — operand+result bytes of major
+  ops only (dot/conv/gather/scatter/collectives + jaxpr inputs), assuming
+  elementwise ops fuse. This is the roofline-relevant minimum HBM traffic.
+* Collective bytes: parsed from the post-SPMD HLO (the only place GSPMD's
+  auto-inserted all-gathers/reduce-scatters exist), with while-loop trip
+  counts recovered from loop-condition constants and multiplied through.
+
+Conventions: jaxpr shapes are GLOBAL; shard_map bodies are PER-DEVICE (their
+costs are multiplied by the mapped mesh size to stay global). Final report
+divides by n_chips -> per-chip seconds.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import jax
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# analytic jaxpr walker
+# ---------------------------------------------------------------------------
+_COLL_PRIMS = {
+    "psum": "all-reduce",
+    "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "psum_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+}
+
+_MAJOR_BYTES_PRIMS = {
+    "dot_general",
+    "conv_general_dilated",
+    "gather",
+    "scatter",
+    "scatter-add",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "sort",
+}
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # scalars / abstract tokens
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    m = int(np.prod([a.shape[i] for i in range(len(a.shape)) if i not in set(lc) | set(lb)]))
+    k = int(np.prod([a.shape[i] for i in lc]))
+    batch = int(np.prod([a.shape[i] for i in lb])) if lb else 1
+    n = int(np.prod([b.shape[i] for i in range(len(b.shape)) if i not in set(rc) | set(rb)]))
+    return 2.0 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops = 2 * out_elems * (kernel spatial * in_channels)
+    kernel = int(np.prod(rhs.shape[:-1]))  # rough: all but out-feature dim
+    return 2.0 * int(np.prod(out.shape)) * kernel
+
+
+def jaxpr_cost(jaxpr, mult: float = 1.0, axis_sizes: dict | None = None) -> dict:
+    """Walk a (closed) jaxpr; returns global flops, major-op bytes, and
+    per-device collective bytes by type."""
+    axis_sizes = axis_sizes or {}
+    acc = {"flops": 0.0, "bytes": 0.0, "collective": defaultdict(float)}
+    _walk(getattr(jaxpr, "jaxpr", jaxpr), mult, axis_sizes, acc)
+    acc["collective"] = dict(acc["collective"])
+    acc["collective"]["total"] = sum(acc["collective"].values())
+    return acc
+
+
+def _sub_jaxprs(eqn):
+    """(sub_jaxpr, extra_multiplier, extra_axis_sizes) triples for one eqn."""
+    p = eqn.params
+    name = eqn.primitive.name
+    out = []
+    if name == "scan":
+        out.append((p["jaxpr"], float(p["length"]), {}))
+    elif name == "while":
+        # we only emit bounded loops via scan; treat raw while as 1 trip
+        out.append((p["body_jaxpr"], 1.0, {}))
+        out.append((p["cond_jaxpr"], 1.0, {}))
+    elif name == "cond":
+        for br in p["branches"]:
+            out.append((br, 1.0, {}))  # upper bound: count all branches? no —
+        out = out[:1] if out else []  # count first branch only (symmetric in our code)
+    elif "jaxpr" in p:
+        out.append((p["jaxpr"], 1.0, {}))
+    elif "call_jaxpr" in p:
+        out.append((p["call_jaxpr"], 1.0, {}))
+    elif name == "shard_map":
+        sizes = dict(p["mesh"].shape)
+        out.append((p["jaxpr"], float(np.prod(list(sizes.values()))), sizes))
+    elif name == "custom_vjp_call" or name == "custom_jvp_call":
+        key = "fun_jaxpr" if "fun_jaxpr" in p else "call_jaxpr"
+        if key in p:
+            out.append((p[key], 1.0, {}))
+    return out
+
+
+def _axis_size(axis, sizes) -> int:
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def _walk(jaxpr, mult, axis_sizes, acc):
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            f = _dot_flops(eqn)
+            acc["flops"] += mult * f
+            acc["bytes"] += mult * (
+                sum(_nbytes(v.aval) for v in eqn.invars) + sum(_nbytes(v.aval) for v in eqn.outvars)
+            )
+        elif name == "conv_general_dilated":
+            acc["flops"] += mult * _conv_flops(eqn)
+            acc["bytes"] += mult * (
+                sum(_nbytes(v.aval) for v in eqn.invars) + sum(_nbytes(v.aval) for v in eqn.outvars)
+            )
+        elif name in _COLL_PRIMS:
+            # per-device payload bytes; inside shard_map shapes are local.
+            # mult includes mesh-size factors from enclosing shard_map — undo
+            # them for the per-device metric, keep loop factors.
+            n_dev = float(np.prod(list(axis_sizes.values()))) if axis_sizes else 1.0
+            payload = sum(_nbytes(v.aval) for v in eqn.invars)
+            kind = _COLL_PRIMS[name]
+            if name == "psum":  # ring: 2x payload on the wire
+                wire = 2.0 * payload
+            elif name in ("all_gather",):
+                wire = payload * max(_axis_size(eqn.params.get("axis_name"), axis_sizes) - 1, 1)
+            else:
+                wire = payload
+            acc["collective"][kind] += (mult / max(n_dev, 1.0)) * wire
+        elif name in _MAJOR_BYTES_PRIMS:
+            acc["bytes"] += mult * (
+                sum(_nbytes(v.aval) for v in eqn.invars) + sum(_nbytes(v.aval) for v in eqn.outvars)
+            )
+        for sub, extra, sizes in _sub_jaxprs(eqn):
+            merged = dict(axis_sizes)
+            merged.update(sizes)
+            _walk(getattr(sub, "jaxpr", sub), mult * extra, merged, acc)
+    # count reads of the jaxpr's own inputs once (params/caches streamed in)
+    if mult == 1.0 and not axis_sizes:
+        acc["bytes"] += sum(_nbytes(v.aval) for v in jaxpr.invars)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing with while trip-count correction
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|s16|u16|pred|s64|u64)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+          "pred": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8}
+_COMP_RE = re.compile(r"^(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=([%\w.\-]+),\s*body=([%\w.\-]+)")
+_COLL_LINE_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[\w\[\],{}\/#: ]*?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """HLO computations start at column 0 ending with '{' and close with a
+    column-0 '}'. (Headers contain nested parens, so split by indentation.)"""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            if line and not line[0].isspace() and line.rstrip().endswith("{"):
+                if line.startswith("ENTRY"):
+                    cur = "ENTRY"
+                else:
+                    cur = line.split()[0].lstrip("%")
+                comps[cur] = []
+        else:
+            if line.strip() == "}" and not line[:1].isspace():
+                cur = None
+            elif line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps
+
+
+def hlo_collective_bytes(hlo: str) -> dict:
+    """Per-device collective payload bytes, scaled by while trip counts."""
+    comps = _split_computations(hlo)
+    if "ENTRY" not in comps:
+        # fall back: find the last computation as entry
+        entry = list(comps)[-1] if comps else None
+    else:
+        entry = "ENTRY"
+
+    # direct collective bytes + while children per computation
+    direct: dict[str, dict[str, float]] = {}
+    children: dict[str, list[tuple[str, str]]] = {}
+    for name, lines in comps.items():
+        d: dict[str, float] = defaultdict(float)
+        ch = []
+        for ln in lines:
+            if "-done(" in ln:
+                continue
+            m = _COLL_LINE_RE.search(ln)
+            if m:
+                d[m.group(2)] += _shape_bytes(m.group(1))
+            w = _WHILE_RE.search(ln)
+            if w:
+                ch.append((w.group(1).lstrip("%"), w.group(2).lstrip("%")))
+        direct[name] = dict(d)
+        children[name] = ch
+
+    def trip_count(cond_name: str) -> float:
+        consts = []
+        for ln in comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST_RE.findall(ln)]
+        return float(max(consts)) if consts else 1.0
+
+    total: dict[str, float] = defaultdict(float)
+    seen: set[tuple[str, float]] = set()
+
+    def visit(name: str, mult: float):
+        if name not in comps:
+            return
+        for k, v in direct.get(name, {}).items():
+            total[k] += mult * v
+        for cond, body in children.get(name, []):
+            visit(body, mult * trip_count(cond))
+
+    if entry:
+        visit(entry, 1.0)
+    out = dict(total)
+    out["total"] = sum(total.values())
+    return out

@@ -1,0 +1,116 @@
+"""Fault-tolerant training driver (checkpoint/restart supervisor).
+
+Runs the end-to-end loop at any scale the local device set allows:
+
+  - deterministic data source keyed by step (restart-safe),
+  - jitted train_step with sharding constraints from the resolved specs,
+  - async checkpointing every ``ckpt_every`` steps,
+  - a SUPERVISOR loop: any exception inside the step loop (device loss,
+    preemption signal file, numerical panic) triggers restore-from-latest
+    and resume; ``--max-failures`` bounds restart storms,
+  - preemption hook: touching ``<ckpt_dir>/PREEMPT`` makes the loop
+    checkpoint + exit(42) at the next step boundary (the scheduler restarts
+    the job elsewhere — standard TPU-pod preemption choreography).
+
+Example (CPU, smoke config):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_source
+from repro.models.model import build_model
+from repro.train.loop import init_train_state, make_train_step
+from repro.train.optimizer import OptConfig
+
+
+def run(args) -> int:
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps, warmup_steps=min(20, args.steps // 10 + 1))
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    data = make_source(
+        DataConfig(vocab=cfg.vocab, global_batch=args.batch, seq_len=args.seq, seed=args.seed)
+    )
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg, microbatches=args.microbatches))
+
+    failures = 0
+    while True:
+        try:
+            # ---- (re)initialize or restore -------------------------------
+            start = ckpt.latest_step()
+            state = init_train_state(model, jax.random.PRNGKey(args.seed), opt_cfg)
+            if start is not None:
+                state = ckpt.restore(start, state)
+                print(f"[supervisor] resumed from step {start}")
+            step0 = (start or 0)
+
+            t_last = time.time()
+            for step in range(step0, args.steps):
+                if os.path.exists(os.path.join(args.ckpt_dir, "PREEMPT")):
+                    print("[supervisor] preemption requested; checkpointing")
+                    ckpt.save(step, state, blocking=True)
+                    return 42
+                batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+                if args.fail_at is not None and step == args.fail_at and failures == 0:
+                    raise RuntimeError("injected failure (test)")
+                state, metrics = step_fn(state, batch)
+                if jnp.isnan(metrics["loss"]):
+                    raise FloatingPointError(f"loss NaN at step {step}")
+                if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+                    ckpt.save(step + 1, state)
+                if (step + 1) % args.log_every == 0:
+                    dt = time.time() - t_last
+                    t_last = time.time()
+                    print(
+                        f"step {step + 1}: loss={float(metrics['loss']):.4f} "
+                        f"gnorm={float(metrics['grad_norm']):.3f} "
+                        f"lr={float(metrics['lr']):.2e} ({dt / args.log_every:.2f}s/step)"
+                    )
+            ckpt.wait()
+            print("[supervisor] training complete")
+            return 0
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:  # noqa: BLE001 — the supervisor's whole job
+            failures += 1
+            print(f"[supervisor] failure #{failures}: {type(e).__name__}: {e}")
+            if failures > args.max_failures:
+                print("[supervisor] failure budget exhausted")
+                raise
+            time.sleep(args.restart_delay)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--max-failures", type=int, default=3)
+    ap.add_argument("--restart-delay", type=float, default=0.5)
+    ap.add_argument("--fail-at", type=int, default=None, help="inject a failure (testing)")
+    raise SystemExit(run(ap.parse_args()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Attention: MHA/GQA/MQA with sliding windows, softcap, RoPE, KV caches.
+
+Three execution paths share one masked online-softmax core:
+
+* ``attend`` (dense): materializes [B, nkv, G, Sq, Sk] scores — short seqs.
+* ``attend_chunked``: double-blocked (q-block x kv-block) online softmax via
+  ``lax.scan`` — bounded memory for 32k+ prefill. Numerically identical to
+  dense (fp32 accumulation both ways).
+* decode: one-token query against a ring-buffer cache.
+
+Sliding-window layers allocate ``min(window, max_len)`` cache slots and write
+with ``pos % len`` (ring); a per-slot absolute-position array drives both the
+causal/window mask and RoPE (keys are rotated at write time), so prefill,
+decode, and window eviction all fall out of one mask rule:
+
+    valid(k_pos, q_pos) = 0 <= k_pos <= q_pos and q_pos - k_pos < window
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import active_axis_size, constrain
+from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, rmsnorm_spec
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d**-0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, kv, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, kv, hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (h, hd, d), dtype) * (h * hd) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def attention_spec(cfg) -> dict:
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_spec()
+        p["k_norm"] = rmsnorm_spec()
+    return p
+
+
+# ---------------------------------------------------------------------------
+# masked softmax core
+# ---------------------------------------------------------------------------
+def _mask(q_pos, k_pos, window, causal):
+    """q_pos: [..., Sq], k_pos: [..., Sk] -> bool [..., Sq, Sk]."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = kp >= 0  # invalid (unwritten) cache slots carry pos = -1
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= qp - kp < window
+    return m
+
+
+def _scores(qg, k, scale, softcap):
+    s = jnp.einsum("bqngd,bknd->bngqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def attend_dense(q, k, v, q_pos, k_pos, *, causal=True, window=None, scale, softcap=None):
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    dv = v.shape[-1]
+    qg = q.reshape(b, sq, kv, g, d)
+    s = _scores(qg, k, scale, softcap)  # [B, KV, G, Sq, Sk]
+    m = _mask(q_pos, k_pos, window, causal)[:, None, None]  # [B,1,1,Sq,Sk]
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (can happen for padded cache) -> zero output
+    p = jnp.where(m.any(-1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bngqk,bknd->bqngd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dv)
+
+
+def attend_chunked(
+    q, k, v, q_pos, k_pos, *, causal=True, window=None, scale, softcap=None,
+    block_q: int = 1024, block_k: int = 1024,
+):
+    """Online-softmax attention, blocked over q and kv (flash-style dataflow)."""
+    b, sq, h, d = q.shape
+    kv_h = k.shape[2]
+    g = h // kv_h
+    dv = v.shape[-1]
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=0)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    nq, nk = (sq + pad_q) // bq, (sk + pad_k) // bk
+
+    # pin block layouts: GSPMD otherwise loses head sharding through the
+    # reshape->moveaxis->scan chain and all-gathers K/V blocks (§Perf A1).
+    # Only pin when the model axis divides kv-heads or q-head-groups —
+    # otherwise pinning would FORCE head replication and regress GQA shapes
+    # like internvl2 (kv=8, g=8 on a 16-way axis); leave GSPMD free there.
+    m_size = active_axis_size("model")
+    pin = m_size > 1 and (kv_h % m_size == 0 or g % m_size == 0)
+
+    def _pin(t, dims):
+        return constrain(t, dims) if pin else t
+
+    # double "model" entry: lands on kv_h when divisible, else on g
+    qg = _pin(q.reshape(b, nq, bq, kv_h, g, d),
+              ("batch", None, None, "model", "model", None))
+    qpos_b = q_pos.reshape(b, nq, bq)
+    kb = _pin(k.reshape(b, nk, bk, kv_h, d), ("batch", None, None, "model", None))
+    vb = _pin(v.reshape(b, nk, bk, kv_h, dv), ("batch", None, None, "model", None))
+    kpos_b = k_pos.reshape(b, nk, bk)
+
+    def q_block(args):
+        qblk, qp = args  # [B, bq, KV, G, D], [B, bq]
+
+        def kv_step(carry, kv_args):
+            m_run, l_run, acc = carry
+            kblk, vblk, kp = kv_args  # [B, bk, KV, D], [B, bk]
+            s = _scores(qblk, kblk, scale, softcap)  # [B, KV, G, bq, bk]
+            msk = _mask(qp, kp, window, causal)[:, None, None]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            # guard: all-masked rows keep m=-inf; exp(NEG_INF - NEG_INF) avoided
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(msk, p, 0.0)
+            corr = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
+            l_new = l_run * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bngqk,bknd->bngqd", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = _pin(jnp.full((b, kv_h, g, bq), NEG_INF, jnp.float32),
+                  ("batch", "model", "model", None))
+        l0 = _pin(jnp.zeros((b, kv_h, g, bq), jnp.float32),
+                  ("batch", "model", "model", None))
+        a0 = _pin(jnp.zeros((b, kv_h, g, bq, dv), jnp.float32),
+                  ("batch", "model", "model", None, None))
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kb, 1, 0),
+                jnp.moveaxis(vb, 1, 0),
+                jnp.moveaxis(kpos_b, 1, 0),
+            ),
+        )
+        out = acc / jnp.maximum(l_f[..., None], 1e-37)
+        return jnp.moveaxis(out, 3, 1)  # [B, bq, KV, G, D]
+
+    outs = jax.lax.map(q_block, (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qpos_b, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * bq, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention_core(q, k, v, q_pos, k_pos, *, causal=True, window=None, scale,
+                   softcap=None, chunk_threshold: int = 4096):
+    """Dispatch dense vs chunked on total score size."""
+    if q.shape[1] * k.shape[1] > chunk_threshold * chunk_threshold // 4 and q.shape[1] > 1:
+        return attend_chunked(
+            q, k, v, q_pos, k_pos, causal=causal, window=window, scale=scale, softcap=softcap
+        )
+    return attend_dense(
+        q, k, v, q_pos, k_pos, causal=causal, window=window, scale=scale, softcap=softcap
+    )
+
+
+# ---------------------------------------------------------------------------
+# full layer: projections + rope + cache handling
+# ---------------------------------------------------------------------------
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int, window: int | None,
+                  dtype=jnp.bfloat16) -> dict:
+    length = max_len if window is None else min(window, max_len)
+    return {
+        "k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def attention_layer(
+    params: dict,
+    x: jax.Array,  # [B, S, E]
+    positions: jax.Array,  # [B, S]
+    cfg,
+    *,
+    window: int | None,
+    cache: dict | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,  # encoder K/V (pre-projected)
+) -> tuple[jax.Array, dict | None]:
+    """Self- (or cross-) attention layer. Returns (output, updated cache)."""
+    h, kv_h, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd**-0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = q  # no rope on cross-attention queries (whisper-style)
+        k_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=jnp.int32)[None], (k.shape[0], k.shape[1])
+        )
+        out = attention_core(
+            q, k, v, positions, k_pos, causal=False, window=None, scale=scale,
+            softcap=cfg.attn_softcap,
+        )
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"], preferred_element_type=x.dtype), cache
+
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = attention_core(
+            q, k, v, positions, positions, causal=True, window=window, scale=scale,
+            softcap=cfg.attn_softcap,
+        )
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"], preferred_element_type=x.dtype), None
+
+    # cache path: only the last `length` tokens can live in the ring buffer,
+    # so keep the tail (ring slots are then collision-free within one write).
+    s = x.shape[0], x.shape[1]
+    length = cache["k"].shape[1]
+    tail = max(0, x.shape[1] - length)
+    k_t, v_t, pos_t = k[:, tail:], v[:, tail:], positions[:, tail:]
+    slots = pos_t % length
+    b_idx = jnp.arange(x.shape[0], dtype=jnp.int32)[:, None]
+    new_cache = {
+        "k": cache["k"].at[b_idx, slots].set(k_t.astype(cache["k"].dtype)),
+        "v": cache["v"].at[b_idx, slots].set(v_t.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[b_idx, slots].set(pos_t),
+    }
+    if x.shape[1] > 1:
+        # prefill: the ring may be smaller than S — attend over full fresh K/V.
+        out = attention_core(
+            q, k, v, positions, positions, causal=True, window=window, scale=scale,
+            softcap=cfg.attn_softcap,
+        )
+    else:
+        # decode: attend against the (just-updated) ring buffer.
+        out = attention_core(
+            q, new_cache["k"], new_cache["v"], positions, new_cache["pos"],
+            causal=True, window=window, scale=scale, softcap=cfg.attn_softcap,
+        )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"], preferred_element_type=x.dtype), new_cache

@@ -1,0 +1,336 @@
+"""Block-pattern backbone: scan-over-periods composition of heterogeneous stacks.
+
+A model is ``prefix_layers`` (unrolled) + ``n_periods`` repetitions of
+``period`` (one ``lax.scan`` over stacked params) + ``remainder`` (unrolled).
+Every block inside a period may be a different kind (attention with its own
+window, MLA, Mamba2, RWKV6) and carries its own FFN (dense/MoE/none), so
+local:global patterns (gemma2/3) and hybrid patterns (zamba2) compile as a
+single scanned body — one layer's HLO regardless of depth.
+
+``shared`` blocks (zamba2) use one parameter set stored OUTSIDE the scan and
+closed over by the body; their per-application KV caches are stacked and
+scanned like everything else.
+
+Caches: pytree mirroring the block structure. A block with no cache uses an
+empty dict (scan-compatible placeholder).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import init_mlp, init_rmsnorm, mlp, mlp_spec, rmsnorm, rmsnorm_spec
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+def init_block(key, spec: BlockSpec, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"pre_norm": init_rmsnorm(cfg.d_model)}
+    if spec.kind == "attn":
+        p["inner"] = attn_mod.init_attention(ks[0], cfg, dtype)
+    elif spec.kind == "mla":
+        p["inner"] = mla_mod.init_mla(ks[0], cfg, dtype)
+    elif spec.kind == "mamba2":
+        p["inner"] = ssm_mod.init_mamba2(ks[0], cfg, dtype)
+    elif spec.kind == "rwkv6":
+        p["inner"] = rwkv_mod.init_rwkv6(ks[0], cfg, dtype)
+    if cross:
+        p["cross_norm"] = init_rmsnorm(cfg.d_model)
+        p["cross"] = attn_mod.init_attention(ks[1], cfg, dtype)
+    if cfg.post_block_norm:
+        p["post_norm"] = init_rmsnorm(cfg.d_model)
+    if spec.ffn != "none":
+        p["ffn_norm"] = init_rmsnorm(cfg.d_model)
+        if spec.ffn == "dense":
+            p["ffn"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["ffn"] = moe_mod.init_moe(ks[2], cfg, dtype)
+            if cfg.n_shared_experts:
+                p["ffn_shared"] = init_mlp(
+                    ks[3], cfg.d_model, cfg.n_shared_experts * cfg.moe_d_ff, dtype
+                )
+        if cfg.post_block_norm:
+            p["ffn_post_norm"] = init_rmsnorm(cfg.d_model)
+    return p
+
+
+def block_spec_tree(spec: BlockSpec, cfg: ModelConfig, cross: bool = False) -> dict:
+    p: dict[str, Any] = {"pre_norm": rmsnorm_spec()}
+    if spec.kind == "attn":
+        p["inner"] = attn_mod.attention_spec(cfg)
+    elif spec.kind == "mla":
+        p["inner"] = mla_mod.mla_spec(cfg)
+    elif spec.kind == "mamba2":
+        p["inner"] = ssm_mod.mamba2_spec(cfg)
+    elif spec.kind == "rwkv6":
+        p["inner"] = rwkv_mod.rwkv6_spec(cfg)
+    if cross:
+        p["cross_norm"] = rmsnorm_spec()
+        p["cross"] = attn_mod.attention_spec(cfg)
+    if cfg.post_block_norm:
+        p["post_norm"] = rmsnorm_spec()
+    if spec.ffn != "none":
+        p["ffn_norm"] = rmsnorm_spec()
+        p["ffn"] = mlp_spec() if spec.ffn == "dense" else moe_mod.moe_spec(cfg)
+        if spec.ffn == "moe" and cfg.n_shared_experts:
+            p["ffn_shared"] = mlp_spec()
+        if cfg.post_block_norm:
+            p["ffn_post_norm"] = rmsnorm_spec()
+    return p
+
+
+def init_block_cache(
+    spec: BlockSpec, cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> dict:
+    if spec.kind in ("attn",):
+        return attn_mod.init_kv_cache(
+            batch, max_len, cfg.n_kv_heads, cfg.head_dim, spec.window, dtype
+        )
+    if spec.kind == "mla":
+        return mla_mod.init_mla_cache(batch, max_len, cfg, dtype)
+    if spec.kind == "mamba2":
+        return ssm_mod.init_mamba2_state(batch, cfg)
+    if spec.kind == "rwkv6":
+        return rwkv_mod.init_rwkv6_state(batch, cfg)
+    return {}
+
+
+def apply_block(
+    params: dict,
+    spec: BlockSpec,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None,
+    enc_out: jax.Array | None = None,
+    moe_impl: str = "local",
+    mesh=None,
+) -> tuple[jax.Array, dict | None, dict]:
+    aux: dict[str, Any] = {}
+    h = rmsnorm(params["pre_norm"], x, cfg.norm_eps)
+    new_cache = cache
+    if spec.kind == "attn":
+        out, new_cache = attn_mod.attention_layer(
+            params["inner"], h, positions, cfg, window=spec.window, cache=cache or None
+        )
+    elif spec.kind == "mla":
+        out, new_cache = mla_mod.mla_layer(params["inner"], h, positions, cfg, cache or None)
+    elif spec.kind == "mamba2":
+        out, new_cache = ssm_mod.mamba2_layer(params["inner"], h, cfg, cache or None)
+    elif spec.kind == "rwkv6":
+        out, new_cache = rwkv_mod.rwkv6_layer(params["inner"], h, cfg, cache or None)
+    else:
+        raise ValueError(spec.kind)
+    if cfg.post_block_norm:
+        out = rmsnorm(params["post_norm"], out, cfg.norm_eps)
+    x = x + out
+    if new_cache is None:
+        new_cache = {}
+
+    if "cross" in params and enc_out is not None:
+        hc = rmsnorm(params["cross_norm"], x, cfg.norm_eps)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, params["cross"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, params["cross"]["wv"])
+        out, _ = attn_mod.attention_layer(
+            params["cross"], hc, positions, cfg, window=None, cross_kv=(ck, cv)
+        )
+        x = x + out
+
+    if spec.ffn != "none":
+        h2 = rmsnorm(params["ffn_norm"], x, cfg.norm_eps)
+        if spec.ffn == "dense":
+            out2 = mlp(params["ffn"], h2)
+        else:
+            b, s, d = h2.shape
+            flat = h2.reshape(b * s, d)
+            if moe_impl == "sharded":
+                y, moe_aux = moe_mod.moe_block_sharded(params["ffn"], h2, cfg, mesh)
+                out2 = y
+            else:
+                y, moe_aux = moe_mod.moe_local(params["ffn"], flat, cfg)
+                out2 = y.reshape(b, s, d)
+            aux["moe_load"] = moe_aux["load"]
+            if cfg.n_shared_experts:
+                out2 = out2 + mlp(params["ffn_shared"], h2)
+        if cfg.post_block_norm:
+            out2 = rmsnorm(params["ffn_post_norm"], out2, cfg.norm_eps)
+        x = x + out2
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Stack:
+    """Static description of the full layer stack for one model."""
+
+    cfg: ModelConfig
+    cross: bool = False  # decoder blocks carry cross-attention (whisper)
+
+    @property
+    def period(self) -> tuple[BlockSpec, ...]:
+        return self.cfg.period
+
+    def init(self, key, dtype) -> dict:
+        cfg = self.cfg
+        n_p = len(cfg.period)
+        keys = jax.random.split(key, cfg.n_periods)
+
+        def init_period(k):
+            kk = jax.random.split(k, n_p)
+            return {
+                f"b{i}": init_block(kk[i], cfg.period[i], cfg, dtype, self.cross)
+                for i in range(n_p)
+                if not cfg.period[i].shared
+            }
+
+        params: dict[str, Any] = {"periods": jax.vmap(init_period)(keys)}
+        shared_specs = [b for b in cfg.period if b.shared]
+        if shared_specs:
+            params["shared_block"] = init_block(
+                jax.random.fold_in(key, 17), shared_specs[0], cfg, dtype, self.cross
+            )
+        for name, blocks in (("prefix", cfg.prefix_layers), ("remainder", cfg.remainder)):
+            for i, b in enumerate(blocks):
+                params[f"{name}{i}"] = init_block(
+                    jax.random.fold_in(key, 100 + i + (0 if name == "prefix" else 50)),
+                    b,
+                    cfg,
+                    dtype,
+                    self.cross,
+                )
+        return params
+
+    def spec(self) -> dict:
+        cfg = self.cfg
+        tree: dict[str, Any] = {
+            "periods": {
+                f"b{i}": block_spec_tree(cfg.period[i], cfg, self.cross)
+                for i in range(len(cfg.period))
+                if not cfg.period[i].shared
+            }
+        }
+        if any(b.shared for b in cfg.period):
+            shared = [b for b in cfg.period if b.shared][0]
+            tree["shared_block"] = block_spec_tree(shared, cfg, self.cross)
+        for name, blocks in (("prefix", cfg.prefix_layers), ("remainder", cfg.remainder)):
+            for i, b in enumerate(blocks):
+                tree[f"{name}{i}"] = block_spec_tree(b, cfg, self.cross)
+        return tree
+
+    def init_caches(self, batch: int, max_len: int, dtype) -> dict:
+        cfg = self.cfg
+
+        def period_caches():
+            return {
+                f"b{i}": init_block_cache(cfg.period[i], cfg, batch, max_len, dtype)
+                for i in range(len(cfg.period))
+            }
+
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[period_caches() for _ in range(cfg.n_periods)]
+        )
+        caches: dict[str, Any] = {"periods": stacked}
+        for name, blocks in (("prefix", cfg.prefix_layers), ("remainder", cfg.remainder)):
+            for i, b in enumerate(blocks):
+                caches[f"{name}{i}"] = init_block_cache(b, cfg, batch, max_len, dtype)
+        return caches
+
+    # ------------------------------------------------------------------
+    def apply(
+        self,
+        params: dict,
+        x: jax.Array,
+        positions: jax.Array,
+        caches: dict | None = None,
+        enc_out: jax.Array | None = None,
+        moe_impl: str = "local",
+        mesh=None,
+    ) -> tuple[jax.Array, dict | None, dict]:
+        cfg = self.cfg
+        aux_acc: dict[str, Any] = {}
+        new_caches: dict[str, Any] = {} if caches is not None else None
+
+        def _merge_aux(aux):
+            for k, v in aux.items():
+                aux_acc[k] = aux_acc.get(k, 0.0) + v
+
+        for i, b in enumerate(cfg.prefix_layers):
+            c = caches[f"prefix{i}"] if caches is not None else None
+            x, nc, aux = apply_block(
+                params[f"prefix{i}"], b, cfg, x, positions, c, enc_out, moe_impl, mesh
+            )
+            if caches is not None:
+                new_caches[f"prefix{i}"] = nc
+            _merge_aux(aux)
+
+        # scanned periods
+        shared_params = params.get("shared_block")
+        period_specs = cfg.period
+        has_cache = caches is not None
+
+        def body(carry, scanned):
+            x_c = carry
+            p_params, p_caches = scanned
+            aux_out = {}
+            ncs = {}
+            for i, b in enumerate(period_specs):
+                bp = shared_params if b.shared else p_params[f"b{i}"]
+                c = p_caches[f"b{i}"] if has_cache else None
+                x_c, nc, aux = apply_block(
+                    bp, b, cfg, x_c, positions, c, enc_out, moe_impl, mesh
+                )
+                ncs[f"b{i}"] = nc if has_cache else {}
+                for k, v in aux.items():
+                    aux_out[k] = aux_out.get(k, 0.0) + v
+            if not aux_out:
+                aux_out = {"_": jnp.zeros(())}
+            return x_c, (ncs, aux_out)
+
+        if cfg.remat != "none" and not has_cache:
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat == "dots"
+                else jax.checkpoint_policies.nothing_saveable
+            )
+            body = jax.checkpoint(body, policy=policy)
+
+        scanned_caches = (
+            caches["periods"]
+            if has_cache
+            else jax.tree.map(lambda _: 0, {f"b{i}": {} for i in range(len(period_specs))})
+        )
+        x, (nc_periods, aux_stack) = jax.lax.scan(
+            body, x, (params["periods"], scanned_caches)
+        )
+        if has_cache:
+            new_caches["periods"] = nc_periods
+        for k, v in aux_stack.items():
+            if k != "_":
+                aux_acc[k] = aux_acc.get(k, 0.0) + v.sum(0)
+                if k == "moe_load":
+                    aux_acc["moe_load_periods"] = v  # [n_periods, E]
+
+        for i, b in enumerate(cfg.remainder):
+            c = caches[f"remainder{i}"] if caches is not None else None
+            x, nc, aux = apply_block(
+                params[f"remainder{i}"], b, cfg, x, positions, c, enc_out, moe_impl, mesh
+            )
+            if caches is not None:
+                new_caches[f"remainder{i}"] = nc
+            _merge_aux(aux)
+
+        return x, new_caches, aux_acc

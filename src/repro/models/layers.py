@@ -1,0 +1,129 @@
+"""Shared primitive layers: norms, RoPE, embeddings, gated MLP.
+
+Module convention (whole models/ package): every layer is a pair of pure
+functions —
+
+    init_<layer>(key, cfg, ...) -> params        (pytree of jnp arrays)
+    <layer>(params, x, ...)     -> y
+
+plus ``<layer>_spec(cfg) -> pytree`` of *logical axis* tuples mirroring the
+params tree (consumed by distributed/sharding.py). No flax — params are plain
+dicts so checkpointing, resharding, and dry-run eval_shape stay trivial.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def dt(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (LLaMA-style; gemma variant adds 1.0 to the scale)
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm_spec() -> dict:
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int32. Rotates pairs (split-half)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embedding_spec(for_input: bool = False) -> dict:
+    # input tables shard the EMBED dim: token gathers then stay local per
+    # shard; vocab-sharded tables would be all-gathered for every lookup.
+    # Output (unembed) tables shard VOCAB for the logits matmul.
+    return {"table": ("vocab_in", "embed") if for_input else ("vocab", "embed")}
+
+
+def embed(params: dict, tokens: jax.Array, scale: bool, d_model: int) -> jax.Array:
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(d_model**0.5, x.dtype)
+    return x
+
+
+def unembed(params: dict, x: jax.Array, softcap: float | None = None) -> jax.Array:
+    logits = jnp.einsum("bsd,vd->bsv", x, params["table"]).astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d**-0.5, d_ff**-0.5
+    return {
+        "wi_gate": jax.random.normal(k1, (d, d_ff), dtype) * s_in,
+        "wi_up": jax.random.normal(k2, (d, d_ff), dtype) * s_in,
+        "wo": jax.random.normal(k3, (d_ff, d), dtype) * s_out,
+    }
+
+
+def mlp_spec() -> dict:
+    return {
+        "wi_gate": ("embed", "mlp"),
+        "wi_up": ("embed", "mlp"),
+        "wo": ("mlp", "embed"),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, params["wi_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["wi_up"])
+    gate = jax.nn.gelu(gate) if act == "gelu" else jax.nn.silu(gate)
+    # keep the row-parallel partial sums in the input dtype: GSPMD otherwise
+    # promotes the cross-shard reduction to f32 (2x collective bytes, §Perf C2)
+    return jnp.einsum("bsf,fd->bsd", gate * up, params["wo"],
+                      preferred_element_type=x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

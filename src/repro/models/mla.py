@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) — train, prefill, absorbed decode.
+
+Two numerically-equivalent execution paths:
+
+* train/prefill: decompress the latent ``c_kv`` into per-head K/V and run the
+  shared chunked attention core (bounded memory at 32k prefill).
+* decode ("absorbed"): the cache stores only ``(c_kv[B,L,512], k_rope[B,L,64])``
+  — 4.7x smaller than GQA-128 K/V — and the up-projections are absorbed into
+  the query / output sides:
+
+      q_eff[b,h,c]   = sum_d q_nope[b,h,d] * w_uk[c,h,d]
+      score          = (q_eff . c_kv + q_rope . k_rope) * scale
+      ctx[b,h,c]     = sum_l softmax(score)[l] * c_kv[l,c]
+      out_head[b,h,d]= sum_c ctx[b,h,c] * w_uv[c,h,d]
+
+Equivalence decode==prefill is asserted in tests/test_models.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.attention import attention_core
+from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, rmsnorm_spec
+
+
+def init_mla(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    s = d**-0.5
+    p = {}
+    if r_q:
+        p["w_dq"] = jax.random.normal(ks[0], (d, r_q), dtype) * s
+        p["q_norm"] = init_rmsnorm(r_q)
+        p["w_uq"] = jax.random.normal(ks[1], (r_q, h, dn + dr), dtype) * r_q**-0.5
+    else:
+        p["w_uq"] = jax.random.normal(ks[1], (d, h, dn + dr), dtype) * s
+    p["w_dkv"] = jax.random.normal(ks[2], (d, r_kv), dtype) * s
+    p["kv_norm"] = init_rmsnorm(r_kv)
+    p["w_kr"] = jax.random.normal(ks[3], (d, dr), dtype) * s
+    p["w_uk"] = jax.random.normal(ks[4], (r_kv, h, dn), dtype) * r_kv**-0.5
+    p["w_uv"] = jax.random.normal(ks[5], (r_kv, h, dv), dtype) * r_kv**-0.5
+    p["wo"] = jax.random.normal(ks[6], (h, dv, d), dtype) * (h * dv) ** -0.5
+    return p
+
+
+def mla_spec(cfg) -> dict:
+    p = {
+        "w_dkv": ("embed", "kv_lora"),
+        "kv_norm": rmsnorm_spec(),
+        "w_kr": ("embed", "head_dim"),
+        "w_uk": ("kv_lora", "heads", "head_dim"),
+        "w_uv": ("kv_lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = ("embed", "q_lora")
+        p["q_norm"] = rmsnorm_spec()
+        p["w_uq"] = ("q_lora", "heads", "head_dim")
+    else:
+        p["w_uq"] = ("embed", "heads", "head_dim")
+    return p
+
+
+def init_mla_cache(batch: int, max_len: int, cfg, dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def _project_q(params, x, cfg):
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+        cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_uq"])
+    return q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+
+
+def mla_layer(
+    params: dict,
+    x: jax.Array,  # [B, S, E]
+    positions: jax.Array,  # [B, S]
+    cfg,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    q_nope, q_rope = _project_q(params, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        b_idx = jnp.arange(x.shape[0], dtype=jnp.int32)[:, None]
+        slots = positions % cache["c_kv"].shape[1]
+        new_cache = {
+            "c_kv": cache["c_kv"].at[b_idx, slots].set(c_kv.astype(cache["c_kv"].dtype)),
+            "k_rope": cache["k_rope"].at[b_idx, slots].set(k_rope.astype(cache["k_rope"].dtype)),
+            "pos": cache["pos"].at[b_idx, slots].set(positions),
+        }
+
+    if x.shape[1] > 1 or cache is None:
+        # -- train / prefill: decompress and use the shared attention core --
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = constrain(q, ("batch", None, "model", None))
+        k = constrain(k, ("batch", None, "model", None))
+        v = constrain(v, ("batch", None, "model", None))
+        out = attention_core(
+            q, k, v, positions, positions, causal=True, window=None, scale=scale, softcap=None
+        )
+    else:
+        # -- absorbed decode against the latent cache -----------------------
+        q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, params["w_uk"])  # [B,1,H,r_kv]
+        ck, kr, kpos = new_cache["c_kv"], new_cache["k_rope"], new_cache["pos"]
+        s_lat = jnp.einsum(
+            "bshr,blr->bhsl", q_eff.astype(jnp.float32), ck.astype(jnp.float32)
+        )
+        s_rope = jnp.einsum(
+            "bshr,blr->bhsl", q_rope.astype(jnp.float32), kr.astype(jnp.float32)
+        )
+        scores = (s_lat + s_rope) * scale
+        mask = (kpos[:, None, None, :] >= 0) & (kpos[:, None, None, :] <= positions[:, None, :, None])
+        scores = jnp.where(mask, scores, -2.0e38)
+        p_attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhsl,blr->bshr", p_attn.astype(ck.dtype), ck)
+        out = jnp.einsum("bshr,rhd->bshd", ctx, params["w_uv"])
+
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"], preferred_element_type=x.dtype), new_cache

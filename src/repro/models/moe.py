@@ -1,0 +1,363 @@
+"""Mixture-of-Experts with DYNAPs two-stage tag dispatch (DESIGN.md §3).
+
+The mapping from the paper's routing scheme (core/two_stage.py) to MoE:
+
+  spiking neuron        -> token with a routing decision
+  tag                   -> expert id *within its expert shard* (k = E_local)
+  cluster               -> expert shard (one device slab of the `model` axis)
+  stage 1 point-to-point-> all_to_all of token payloads to destination shards
+  stage 2 CAM broadcast -> on-shard scatter of received events into expert
+                           buffers by tag (every expert "subscribed" to its
+                           own tag picks its events out of the broadcast)
+
+Routing state per token is (tag, dest-cluster) — log2(E_local)+log2(tp) bits,
+exactly the paper's MEM_S entry — instead of a T x E dispatch matrix; this is
+what keeps dispatch memory linear in tokens (Fig. 13's argument applied to
+expert routing).
+
+Three implementations, numerically interchangeable (tests assert so):
+  * ``moe_reference``      — loop over experts, dense masks (oracle, tiny dims)
+  * ``moe_local``          — sort-based two-stage dispatch on one device
+  * ``moe_sharded``        — shard_map EP: stage-1 all_to_all over the model
+                             axis, stage-2 local dispatch (production path)
+
+Routers: softmax top-k (deepseek-moe-16b) and sigmoid+bias aux-free
+(deepseek-v3; the bias is updated outside the gradient, train/loop.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.8 renamed check_rep -> check_vma
+    import inspect
+
+    _SM_CHECK_KW = (
+        {"check_vma": False}
+        if "check_vma" in inspect.signature(jax.shard_map).parameters
+        else {"check_rep": False}
+    )
+except Exception:  # pragma: no cover
+    _SM_CHECK_KW = {}
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d**-0.5, f**-0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in,
+        "router_bias": jnp.zeros((e,), jnp.float32),
+        "wi_gate": jax.random.normal(ks[1], (e, d, f), dtype) * s_in,
+        "wi_up": jax.random.normal(ks[2], (e, d, f), dtype) * s_in,
+        "wo": jax.random.normal(ks[3], (e, f, d), dtype) * s_out,
+    }
+    return p
+
+
+def moe_spec(cfg) -> dict:
+    p = {
+        "router": ("embed", None),
+        "router_bias": (None,),
+        "wi_gate": ("experts", "embed", "mlp"),
+        "wi_up": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing decisions (stage-0: which tag/cluster does each token emit?)
+# ---------------------------------------------------------------------------
+def route(params: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: [T, D] -> (top_idx [T,k], top_w [T,k], load [E]).
+
+    deepseek-v3 aux-free: routing by sigmoid(score)+bias, weights from the
+    *unbiased* sigmoid scores renormalized over the chosen experts.
+    """
+    scores = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    if cfg.router_aux_free:
+        affinity = jax.nn.sigmoid(scores)
+        _, top_idx = jax.lax.top_k(affinity + params["router_bias"][None, :], cfg.top_k)
+        top_w = jnp.take_along_axis(affinity, top_idx, axis=1)
+        top_w = top_w / (top_w.sum(-1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+        top_w, top_idx = jax.lax.top_k(probs, cfg.top_k)
+        top_w = top_w / (top_w.sum(-1, keepdims=True) + 1e-20)
+    load = jnp.zeros((cfg.n_experts,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    return top_idx, top_w, load
+
+
+def aux_loss(params: dict, x: jax.Array, cfg) -> jax.Array:
+    """Switch-style load-balancing loss (used when not aux-free)."""
+    scores = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(scores, axis=-1)
+    _, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    t = x.shape[0]
+    frac = jnp.zeros((cfg.n_experts,)).at[top_idx.reshape(-1)].add(1.0) / (t * cfg.top_k)
+    imp = probs.mean(0)
+    return cfg.n_experts * jnp.sum(frac * imp)
+
+
+# ---------------------------------------------------------------------------
+# expert compute (stage-2 "core": the subscribed synapse integrates)
+# ---------------------------------------------------------------------------
+def _experts_ffn(params: dict, buf: jax.Array, e_slice=None) -> jax.Array:
+    """buf: [E(_local), cap, D] -> same shape through gated FFN."""
+    wi_g, wi_u, wo = params["wi_gate"], params["wi_up"], params["wo"]
+    gate = jnp.einsum("ecd,edf->ecf", buf, wi_g)
+    up = jnp.einsum("ecd,edf->ecf", buf, wi_u)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up, wo)
+
+
+# ---------------------------------------------------------------------------
+# sort-based two-stage dispatch (single device / per-shard stage 2)
+# ---------------------------------------------------------------------------
+def _dispatch_indices(flat_e: jax.Array, n_experts: int, cap: int):
+    """flat expert assignment [A] -> (buffer slot [A] or -1, keep mask [A])."""
+    a = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[sorted_e].add(1, mode="drop")
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(a, dtype=jnp.int32) - starts[sorted_e]
+    keep = (pos_in_e < cap) & (sorted_e >= 0) & (sorted_e < n_experts)
+    slot_sorted = jnp.where(keep, sorted_e * cap + pos_in_e, -1)
+    # undo the sort: slot for the original assignment order
+    slot = jnp.zeros((a,), jnp.int32).at[order].set(slot_sorted)
+    return slot, slot >= 0
+
+
+def moe_local(params: dict, x: jax.Array, cfg, capacity: int | None = None):
+    """Two-stage dispatch on one device. x: [T, D] -> ([T, D], aux)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = capacity or max(8, int(t * k / e * cfg.capacity_factor))
+    top_idx, top_w, load = route(params, x, cfg)
+
+    flat_e = top_idx.reshape(-1)  # [T*k] — the emitted (tag) stream
+    slot, keep = _dispatch_indices(flat_e, e, cap)
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, e * cap)].add(
+        x[token_of] * keep[:, None].astype(x.dtype), mode="drop"
+    )
+    out_buf = _experts_ffn(params, buf.reshape(e, cap, d)).reshape(e * cap, d)
+    gathered = out_buf[jnp.clip(slot, 0)] * keep[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype)
+    y = y.at[token_of].add(gathered * top_w.reshape(-1)[:, None].astype(x.dtype))
+    return y, {"load": load}
+
+
+def moe_reference(params: dict, x: jax.Array, cfg):
+    """Oracle: every expert computed densely for every token (tiny dims only)."""
+    t, d = x.shape
+    top_idx, top_w, load = route(params, x, cfg)
+    combine = (
+        jnp.zeros((t, cfg.n_experts), jnp.float32)
+        .at[jnp.arange(t)[:, None], top_idx]
+        .add(top_w)
+    )
+    all_out = _experts_ffn(params, jnp.broadcast_to(x[None], (cfg.n_experts, t, d)))
+    y = jnp.einsum("te,etd->td", combine, all_out.astype(jnp.float32)).astype(x.dtype)
+    return y, {"load": load}
+
+
+# ---------------------------------------------------------------------------
+# sharded EP: stage-1 all_to_all (point-to-point to the destination cluster)
+# ---------------------------------------------------------------------------
+def _axes_tuple(axes):
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _axes_size(axes) -> int:
+    n = 1
+    for a in _axes_tuple(axes):
+        n *= jax.lax.axis_size(a)
+    return n
+
+
+def _axes_linear_index(axes) -> jax.Array:
+    """Linearized rank over a tuple of mesh axes (row-major, like P(axes))."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in _axes_tuple(axes):
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def moe_sharded(params: dict, x: jax.Array, cfg, axis="model",
+                capacity: int | None = None, owned: jax.Array | None = None):
+    """Runs INSIDE shard_map. x: [t_local, D]; experts sharded over ``axis``
+    (a mesh-axis name or tuple — e.g. ("data","model") = in-pod EP256).
+
+    Stage 1 = all_to_all of token payloads to their destination expert shard
+    ("cluster"), stage 2 = local sort-based dispatch by tag (expert id within
+    the shard). ``owned`` masks out tokens this rank must NOT dispatch (used
+    when activations are replicated over part of the EP mesh at decode).
+    """
+    tp = _axes_size(axis)
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_local = e // tp
+    cap_send = capacity or max(8, int(t * k / tp * cfg.capacity_factor))
+    cap_recv = max(8, int(t * k / e_local * cfg.capacity_factor))
+
+    top_idx, top_w, _ = route(params, x, cfg)
+    flat_e = top_idx.reshape(-1)  # [T*k] — the emitted (tag) stream
+    if owned is not None:
+        flat_e = jnp.where(jnp.repeat(owned, k), flat_e, -1)
+    # load counts only assignments this rank actually emits (exact after psum)
+    load = jnp.zeros((e,), jnp.float32).at[jnp.where(flat_e >= 0, flat_e, e)].add(
+        1.0, mode="drop"
+    )
+    dest = jnp.where(flat_e >= 0, flat_e // e_local, -1)  # cluster id
+    tag = flat_e % e_local  # tag within cluster
+
+    # pack per-destination send buffers (stage-1 SRAM entries -> fabric)
+    slot, keep = _dispatch_indices(jnp.where(dest >= 0, dest, tp), tp, cap_send)
+    keep = keep & (dest >= 0)
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    drop = tp * cap_send
+    idx = jnp.where(keep, slot, drop)
+    payload = jnp.zeros((drop + 1, d), x.dtype).at[idx].add(
+        x[token_of] * keep[:, None].astype(x.dtype)
+    )[:-1]
+    tags_buf = jnp.full((drop + 1,), -1, jnp.int32).at[idx].max(jnp.where(keep, tag, -1))[:-1]
+
+    payload = payload.reshape(tp, cap_send, d)
+    tags_buf = tags_buf.reshape(tp, cap_send)
+
+    # stage 1: point-to-point exchange over the EP mesh (R2 hop; in-pod only)
+    recv_x = jax.lax.all_to_all(payload, axis, split_axis=0, concat_axis=0, tiled=False)
+    recv_tag = jax.lax.all_to_all(tags_buf, axis, split_axis=0, concat_axis=0, tiled=False)
+
+    # stage 2: local dispatch of received events by tag (CAM match)
+    ev_x = recv_x.reshape(tp * cap_send, d)
+    ev_tag = recv_tag.reshape(tp * cap_send)
+    slot2, keep2 = _dispatch_indices(jnp.where(ev_tag >= 0, ev_tag, e_local), e_local, cap_recv)
+    keep2 = keep2 & (ev_tag >= 0)
+    drop2 = e_local * cap_recv
+    idx2 = jnp.where(keep2, slot2, drop2)
+    buf = jnp.zeros((drop2 + 1, d), x.dtype).at[idx2].add(
+        ev_x * keep2[:, None].astype(x.dtype)
+    )[:-1]
+
+    out_buf = _experts_ffn(params, buf.reshape(e_local, cap_recv, d)).reshape(drop2, d)
+
+    # inverse path: events pick up their results, a2a back, weighted combine
+    ev_out = out_buf[jnp.clip(slot2, 0)] * keep2[:, None].astype(x.dtype)
+    back = jax.lax.all_to_all(
+        ev_out.reshape(tp, cap_send, d), axis, split_axis=0, concat_axis=0, tiled=False
+    ).reshape(tp * cap_send, d)
+    gathered = back[jnp.clip(slot, 0)] * keep[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype)
+    y = y.at[token_of].add(gathered * top_w.reshape(-1)[:, None].astype(x.dtype))
+
+    return y, {"load": load}
+
+
+# ---------------------------------------------------------------------------
+# jit-level wrapper: shard_map the two-stage dispatch over the mesh
+# ---------------------------------------------------------------------------
+def ep_axes_for(cfg, mesh, model_axis: str = "model"):
+    """EP mesh axes: same resolution rule as the expert weight sharding
+    (distributed/sharding.py RULES['experts']) so dispatch matches storage."""
+    import numpy as np
+
+    for cand in (("data", model_axis), (model_axis,), ("data",)):
+        if all(a in mesh.shape for a in cand):
+            size = int(np.prod([mesh.shape[a] for a in cand]))
+            if size > 1 and cfg.n_experts % size == 0:
+                return cand
+    return ()
+
+
+def moe_block_sharded(params: dict, x3: jax.Array, cfg, mesh, model_axis: str = "model"):
+    """x3: [B, S, D] (global). Activation layout adapts to the cell:
+
+    * tokens split over (batch axes) x (seq over model) when S divides the
+      model axis (train / prefill) — every device dispatches a distinct slab;
+    * otherwise (decode, S == 1) tokens shard over whatever batch axes divide
+      B and are REPLICATED over the remaining EP axes; each replica rank
+      dispatches only its strided slice of tokens (owned mask) and outputs
+      are psum-recombined — correctness without duplicate expert work.
+
+    The EP exchange never crosses the pod axis: expert clusters live inside a
+    pod and pods replicate experts (the paper's "local traffic stays local").
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        from jax import shard_map as _shard_map
+    except ImportError:  # older jax
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+    ep = ep_axes_for(cfg, mesh, model_axis)
+    if not ep:  # tiny config / 1-device mesh: local dispatch
+        b, s, d = x3.shape
+        y, aux = moe_local(params, x3.reshape(b * s, d), cfg)
+        return y.reshape(b, s, d), aux
+
+    b, s, d = x3.shape
+    pspec = {
+        "router": P(),
+        "router_bias": P(),
+        "wi_gate": P(ep),
+        "wi_up": P(ep),
+        "wo": P(ep),
+    }
+
+    def axes_size(axes):
+        return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    s_shardable = s % mesh.shape[model_axis] == 0 and s > 1
+
+    # batch sharding: as many of (pod, data) as divide B
+    b_axes = [a for a in ("pod", "data") if a in mesh.shape]
+    while b_axes and b % axes_size(b_axes) != 0:
+        b_axes.pop(0)
+
+    if s_shardable:
+        act_used = set(b_axes) | {model_axis}
+        in_x = P(tuple(b_axes) if b_axes else None, model_axis, None)
+    else:
+        act_used = set(b_axes)
+        in_x = P(tuple(b_axes) if b_axes else None, None, None)
+    rep_axes = tuple(a for a in ep if a not in act_used)
+    # non-EP axes over which tokens are replicated run independent identical
+    # dispatches (DP replicas, e.g. pod when B doesn't divide it): divide
+    # their multiplicity out of the load accounting.
+    dup = 1
+    for a in mesh.axis_names:
+        if a not in ep and a not in act_used:
+            dup *= mesh.shape[a]
+
+    def local_fn(p, xx):
+        bl, sl, dl = xx.shape
+        t = bl * sl
+        flat = xx.reshape(t, dl)
+        owned = None
+        if rep_axes:
+            rank = _axes_linear_index(rep_axes)
+            n_rep = _axes_size(rep_axes)
+            owned = (jnp.arange(t, dtype=jnp.int32) % n_rep) == rank
+        y, aux = moe_sharded(p, flat, cfg, axis=ep, owned=owned)
+        if rep_axes:
+            y = jax.lax.psum(y, rep_axes)
+        # exact global load: sum emitted counts over every rank, de-duped
+        load = jax.lax.psum(aux["load"], tuple(mesh.axis_names)) / dup
+        return y.reshape(bl, sl, dl), {"load": load}
+
+    f = _shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(pspec, in_x),
+        out_specs=(in_x, {"load": P()}),
+        **_SM_CHECK_KW,
+    )
+    return f(params, x3)

@@ -1,0 +1,248 @@
+"""RWKV6 "Finch" — data-dependent decay linear attention (arXiv:2404.05892).
+
+Per head (vectors r, k in R^P, v in R^P, decay w_t in (0,1)^P, bonus u):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T                 S: [P, P]
+    y_t = (r_t)^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Token-shift mixing is data-dependent through a low-rank "ddlerp" (the Finch
+novelty): mix_x = x + (x_prev - x) * (mu + lora(x + (x_prev - x) * mu0)).
+
+Train/prefill runs a chunked form whose decay factors are all <= 1 (products
+of w along the chunk), so no max-subtraction is needed; ``rwkv6_sequential``
+is the oracle. A Pallas kernel (kernels/rwkv6) implements the chunk step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_rwkv6(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    ks = jax.random.split(key, 12)
+    s = d**-0.5
+    return {
+        # token-shift data-dependent mixing (5 channels: r, k, v, w, g)
+        "mu": jax.random.normal(ks[0], (5, d), jnp.float32) * 0.1,
+        "mu0": jax.random.normal(ks[1], (d,), jnp.float32) * 0.1,
+        "mix_a": jax.random.normal(ks[2], (d, 5 * cfg.rwkv_lora_mix), dtype) * s,
+        "mix_b": jax.random.normal(ks[3], (5, cfg.rwkv_lora_mix, d), dtype)
+        * cfg.rwkv_lora_mix**-0.5,
+        # projections
+        "wr": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "wk": jax.random.normal(ks[5], (d, d), dtype) * s,
+        "wv": jax.random.normal(ks[6], (d, d), dtype) * s,
+        "wg": jax.random.normal(ks[7], (d, d), dtype) * s,
+        "wo": jax.random.normal(ks[8], (d, d), dtype) * s,
+        # data-dependent decay lora
+        "w_base": jnp.full((d,), -6.0, jnp.float32),
+        "w_a": jax.random.normal(ks[9], (d, cfg.rwkv_lora_w), dtype) * s,
+        "w_b": jax.random.normal(ks[10], (cfg.rwkv_lora_w, d), dtype)
+        * cfg.rwkv_lora_w**-0.5,
+        "u_bonus": jax.random.normal(ks[11], (h, p), jnp.float32) * 0.1,
+        "ln_out": init_rmsnorm(d),
+    }
+
+
+def rwkv6_spec(cfg) -> dict:
+    return {
+        "mu": (None, "embed"),
+        "mu0": ("embed",),
+        "mix_a": ("embed", None),
+        "mix_b": (None, None, "embed"),
+        "wr": ("embed", "heads_flat"),
+        "wk": ("embed", "heads_flat"),
+        "wv": ("embed", "heads_flat"),
+        "wg": ("embed", "heads_flat"),
+        "wo": ("heads_flat", "embed"),
+        "w_base": ("heads_flat",),
+        "w_a": ("embed", None),
+        "w_b": (None, "heads_flat"),
+        "u_bonus": ("heads", None),
+        "ln_out": {"scale": ("embed",)},
+    }
+
+
+def init_rwkv6_state(batch: int, cfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    return {
+        "x_prev": jnp.zeros((batch, d), dtype),  # token-shift memory
+        "wkv": jnp.zeros((batch, h, p, p), dtype),  # per-head state matrix
+    }
+
+
+# ---------------------------------------------------------------------------
+# projections with data-dependent token shift
+# ---------------------------------------------------------------------------
+def _ddlerp(params, x, x_shift):
+    """Finch data-dependent mixing -> (r_in, k_in, v_in, w_in, g_in)."""
+    dx = x_shift - x  # [B,S,D]
+    base = x + dx * params["mu0"][None, None]
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, params["mix_a"]))
+    lora = lora.reshape(*lora.shape[:2], 5, -1)
+    mixes = params["mu"][None, None] + jnp.einsum(
+        "bscr,crd->bscd", lora.astype(params["mix_b"].dtype), params["mix_b"]
+    ).astype(jnp.float32)
+    out = x[:, :, None, :] + dx[:, :, None, :] * mixes  # [B,S,5,D]
+    return tuple(out[:, :, i] for i in range(5))
+
+
+def _project(params, x, x_shift, cfg):
+    h = cfg.n_heads
+    p = cfg.d_model // h
+    xr, xk, xv, xw, xg = _ddlerp(params, x.astype(jnp.float32), x_shift.astype(jnp.float32))
+    cd = params["wr"].dtype
+    r = jnp.einsum("bsd,de->bse", xr.astype(cd), params["wr"])
+    k = jnp.einsum("bsd,de->bse", xk.astype(cd), params["wk"])
+    v = jnp.einsum("bsd,de->bse", xv.astype(cd), params["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg.astype(cd), params["wg"]))
+    # decay: w in (0,1): exp(-exp(base + lora))
+    wl = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw.astype(cd)), params["w_a"])
+    logw = params["w_base"][None, None] + jnp.einsum(
+        "bsr,rd->bsd", wl, params["w_b"]
+    ).astype(jnp.float32)
+    log_decay = -jnp.exp(jnp.clip(logw, -20.0, 1.0))  # log w_t  (< 0)
+    shp = (*x.shape[:2], h, p)
+    return (
+        r.reshape(shp).astype(jnp.float32),
+        k.reshape(shp).astype(jnp.float32),
+        v.reshape(shp).astype(jnp.float32),
+        log_decay.reshape(shp),
+        g,
+    )
+
+
+# ---------------------------------------------------------------------------
+# cores
+# ---------------------------------------------------------------------------
+def rwkv6_sequential_core(r, k, v, log_w, u, s0=None):
+    """r/k/v/log_w: [B,S,H,P]; u: [H,P]. Returns (y [B,S,H,P], s_f [B,H,P,P])."""
+    b, s, h, p = r.shape
+    state = jnp.zeros((b, h, p, p), jnp.float32) if s0 is None else s0
+
+    def step(st, t_in):
+        r_t, k_t, v_t, lw_t = t_in  # [B,H,P]
+        kv = jnp.einsum("bhp,bhq->bhpq", k_t, v_t)
+        y_t = jnp.einsum("bhp,bhpq->bhq", r_t, st + u[None, :, :, None] * kv)
+        st_new = st * jnp.exp(lw_t)[..., None] + kv
+        return st_new, y_t
+
+    s_f, ys = jax.lax.scan(
+        step,
+        state,
+        tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, log_w)),
+    )
+    return jnp.moveaxis(ys, 0, 1), s_f
+
+
+def rwkv6_chunked_core(r, k, v, log_w, u, chunk: int, s0=None, use_kernel: bool = False):
+    b, s, h, p = r.shape
+    pad = (-s) % chunk
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    rc, kc, vc, wc = (
+        t.reshape(b, nc, chunk, h, p) for t in (r, k, v, log_w)
+    )
+    state = jnp.zeros((b, h, p, p), jnp.float32) if s0 is None else s0
+
+    if use_kernel:
+        from repro.kernels.rwkv6 import ops as rwkv_ops
+
+        chunk_fn = rwkv_ops.rwkv6_chunk
+    else:
+        chunk_fn = rwkv6_chunk_ref
+
+    def chunk_step(st, c_in):
+        rr, kk, vv, ww = c_in  # [B,T,H,P]
+        y, st_new = chunk_fn(rr, kk, vv, ww, u, st)
+        return st_new, y
+
+    s_f, ys = jax.lax.scan(
+        chunk_step,
+        state,
+        tuple(jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, wc)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s + pad, h, p)[:, :s]
+    return y, s_f
+
+
+def rwkv6_chunk_ref(r, k, v, log_w, u, s0):
+    """One chunk, closed form. r/k/v/log_w: [B,T,H,P]; s0: [B,H,P,P].
+
+    cum[t] = sum_{j<=t} log_w[j]  (inclusive). Contribution of i<t to y_t:
+        (r_t * exp(cum[t-1]-cum[i])) . k_i  outer  v_i
+    i == t uses the bonus u instead of decay. All exponents <= 0.
+    """
+    b, t, h, p = r.shape
+    cum = jnp.cumsum(log_w, axis=1)  # [B,T,H,P]
+    cum_prev = cum - log_w  # cum[t-1] (exclusive)
+    # pairwise decay exp(cum_prev[t] - cum[i]) for i < t  -> [B,T,T,H,P]
+    diff = cum_prev[:, :, None] - cum[:, None, :, :]
+    idx = jnp.arange(t)
+    strict = idx[:, None] > idx[None, :]
+    decay = jnp.where(strict[None, :, :, None, None], jnp.exp(diff), 0.0)
+    return _chunk_finish(r, k, v, u, s0, cum, cum_prev, decay)
+
+
+def _chunk_finish(r, k, v, u, s0, cum, cum_prev, decay):
+    # intra (i < t): per-head attention-like matrix [B,T,T,H]
+    a_mat = jnp.einsum("bthp,btihp,bihp->btih", r, decay, k)
+    y = jnp.einsum("btih,bihq->bthq", a_mat, v)
+    # diagonal bonus term (i == t)
+    diag = jnp.einsum("bthp,hp,bthp->bth", r, u, k)
+    y = y + diag[..., None] * v
+    # carry-in state, read with decay exp(cum_prev[t])
+    y = y + jnp.einsum("bthp,bthp,bhpq->bthq", r, jnp.exp(cum_prev), s0)
+    # state update: S' = diag(exp(cum[T-1])) S + sum_i exp(cum[T-1]-cum[i]) k_i v_i^T
+    tail = jnp.exp(cum[:, -1:] - cum)  # [B,T,H,P]
+    s_new = s0 * jnp.exp(cum[:, -1])[..., None] + jnp.einsum(
+        "bihp,bihp,bihq->bhpq", tail, k, v
+    )
+    return y, s_new
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+def rwkv6_layer(params, x, cfg, state: dict | None = None, sequential: bool = False,
+                use_kernel: bool = False):
+    """Time-mix block. x: [B,S,D] -> (y, new_state)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    p = d // h
+    if state is not None:
+        prev = state["x_prev"][:, None]  # [B,1,D]
+    else:
+        prev = jnp.zeros((b, 1, d), x.dtype)
+    x_shift = jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+    r, k, v, log_w, g = _project(params, x, x_shift, cfg)
+    u = params["u_bonus"]
+    s0 = state["wkv"] if state is not None else None
+    if sequential or s == 1:
+        y, s_f = rwkv6_sequential_core(r, k, v, log_w, u, s0)
+    else:
+        y, s_f = rwkv6_chunked_core(r, k, v, log_w, u, cfg.ssm_chunk, s0, use_kernel)
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(params["ln_out"], y, cfg.norm_eps) * g.astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["wo"])
+    new_state = None
+    if state is not None:
+        new_state = {"x_prev": x[:, -1].astype(state["x_prev"].dtype), "wkv": s_f}
+    return out, new_state

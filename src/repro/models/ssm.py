@@ -1,0 +1,215 @@
+"""Mamba2 (SSD) block — chunked parallel train path + recurrent decode path.
+
+State-space recurrence per head (A scalar per head, Mamba-2 simplification):
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t        h: [P, N]
+    y_t = C_t . h_t + D * x_t
+
+Train/prefill uses the chunked (SSD) algorithm: within-chunk contributions via
+a causal decay matrix L[t, i] = exp(cum[t] - cum[i]) (always <= 1, numerically
+safe — no max-subtraction needed), across-chunk via a scanned state carry.
+``mamba2_sequential`` is the oracle; tests assert chunked == sequential and
+prefill+decode == full.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_mamba2(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    g = 1  # n_groups
+    conv_ch = di + 2 * g * n
+    d_in = 2 * di + 2 * g * n + h
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, d_in), dtype) * d**-0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) in [-1, ...)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": {"scale": jnp.zeros((di,), jnp.float32)},
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * di**-0.5,
+    }
+
+
+def mamba2_spec(cfg) -> dict:
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": {"scale": ("inner",)},
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def init_mamba2_state(batch: int, cfg, dtype=jnp.float32) -> dict:
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p = di // h
+    conv_ch = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, p, n), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+def _split_proj(params, u, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", u, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt  # [B,S,di], [B,S,di+2N], [B,S,H]
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev: jax.Array | None):
+    """Depthwise causal conv along seq; prev = [B, K-1, C] history (decode)."""
+    k = conv_w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, S+K-1, C]
+    out = sum(xp[:, i : i + xbc.shape[1]] * conv_w[i][None, None] for i in range(k))
+    out = jax.nn.silu(out + conv_b[None, None])
+    new_prev = xp[:, xp.shape[1] - (k - 1) :]
+    return out, new_prev
+
+
+def _heads(x, b_mat, c_mat, dt, params, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p = di // h
+    bsz, s = x.shape[:2]
+    xh = x.reshape(bsz, s, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    a = -jnp.exp(params["a_log"])  # [H]
+    return xh, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32), dt, a
+
+
+# ---------------------------------------------------------------------------
+# sequential oracle
+# ---------------------------------------------------------------------------
+def mamba2_sequential_core(xh, b_mat, c_mat, dt, a, d_skip, h0=None):
+    """xh: [B,S,H,P]; b/c: [B,S,N]; dt: [B,S,H]; returns (y [B,S,H,P], h_f)."""
+    bsz, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    h_state = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0
+
+    def step(h_prev, t_in):
+        x_t, b_t, c_t, dt_t = t_in
+        decay = jnp.exp(dt_t * a[None, :])  # [B,H]
+        upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], b_t)
+        h_new = h_prev * decay[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", h_new, c_t)
+        return h_new, y_t
+
+    h_f, ys = jax.lax.scan(
+        step,
+        h_state,
+        (
+            jnp.moveaxis(xh, 1, 0),
+            jnp.moveaxis(b_mat, 1, 0),
+            jnp.moveaxis(c_mat, 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1) + xh * d_skip[None, None, :, None]
+    return y, h_f
+
+
+# ---------------------------------------------------------------------------
+# chunked (SSD) core
+# ---------------------------------------------------------------------------
+def mamba2_chunked_core(xh, b_mat, c_mat, dt, a, d_skip, chunk: int, h0=None):
+    bsz, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xc = xh.reshape(bsz, nc, chunk, h, p)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+
+    h_init = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0
+
+    def chunk_step(h_prev, c_in):
+        x, b, c, dtt = c_in  # [B,T,H,P], [B,T,N], [B,T,N], [B,T,H]
+        la = dtt * a[None, None]  # log decay per step, <= 0
+        cum = jnp.cumsum(la, axis=1)  # [B,T,H] inclusive
+        # intra-chunk: L[t,i] = exp(cum[t]-cum[i]) for i<=t  (<=1, safe)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # [B,T,T,H]
+        t_idx = jnp.arange(x.shape[1])
+        causal = t_idx[:, None] >= t_idx[None, :]
+        l_mat = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("btn,bin->bti", c, b)  # [B,T,T]
+        w = cb[:, :, :, None] * l_mat  # [B,T,T,H]
+        y = jnp.einsum("btih,bihp->bthp", w, x * dtt[..., None])
+        # inter-chunk: carry-in state read by C with decay exp(cum[t])
+        read = jnp.exp(cum)  # [B,T,H]
+        y = y + jnp.einsum("btn,bhpn,bth->bthp", c, h_prev, read)
+        # state update: h_new = exp(cum[-1]) h_prev + sum_i exp(cum[-1]-cum[i]) dt_i B_i x_i
+        tail = jnp.exp(cum[:, -1:, :] - cum)  # [B,T,H]
+        upd = jnp.einsum("bihp,bin,bih->bhpn", x * dtt[..., None], b, tail)
+        h_new = h_prev * jnp.exp(cum[:, -1])[:, :, None, None] + upd
+        return h_new, y
+
+    h_f, ys = jax.lax.scan(
+        chunk_step,
+        h_init,
+        (
+            jnp.moveaxis(xc, 1, 0),
+            jnp.moveaxis(bc, 1, 0),
+            jnp.moveaxis(cc, 1, 0),
+            jnp.moveaxis(dtc, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s + pad, h, p)[:, :s]
+    y = y + xh[:, :s] * d_skip[None, None, :, None]
+    return y, h_f
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+def mamba2_layer(params, u, cfg, state: dict | None = None, sequential: bool = False):
+    """u: [B, S, D] -> (y [B, S, D], new_state). state enables decode."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    z, xbc, dt = _split_proj(params, u, cfg)
+    prev = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], prev)
+    x, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+    xh, b_mat, c_mat, dt, a = _heads(x, b_mat, c_mat, dt, params, cfg)
+
+    h0 = state["ssm"] if state is not None else None
+    if sequential or u.shape[1] == 1:
+        y, h_f = mamba2_sequential_core(xh, b_mat, c_mat, dt, a, params["d_skip"], h0)
+    else:
+        y, h_f = mamba2_chunked_core(xh, b_mat, c_mat, dt, a, params["d_skip"], cfg.ssm_chunk, h0)
+
+    y = y.reshape(u.shape[0], u.shape[1], di).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), "ssm": h_f}
+    return out, new_state

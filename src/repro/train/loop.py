@@ -1,0 +1,100 @@
+"""Train step factory: loss + grad + clip + AdamW + MoE bias update.
+
+``make_train_step(model, opt_cfg)`` builds the pure function lowered by the
+dry-run and jitted by the training driver. Supports microbatch gradient
+accumulation (scan over microbatches — the compute/comm overlap unit) and the
+deepseek-v3 aux-free router-bias update (applied outside the gradient).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+TrainState = dict  # {"params": ..., "opt": ..., }
+
+
+def init_train_state(model, key, opt_cfg: OptConfig) -> TrainState:
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def _update_router_bias(params: Any, aux: dict, u: float = 1e-3) -> Any:
+    """deepseek-v3 bias-based load balancing: b_e += u * sign(mean - load_e).
+
+    Uses the per-period load stack so every scanned MoE layer gets its own
+    correction. Applied to params['stack']['periods'][bX]['ffn']['router_bias']
+    (the only router_bias tensors with a leading period dim).
+    """
+    if "moe_load_periods" not in aux:
+        return params
+    load = aux["moe_load_periods"]  # [n_periods, E]
+    delta = u * jnp.sign(load.mean(-1, keepdims=True) - load)
+
+    def walk(node, in_periods=False):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "router_bias" and in_periods and v.ndim == 2:
+                    out[k] = v + delta.astype(v.dtype)
+                else:
+                    out[k] = walk(v, in_periods or k == "periods")
+            return out
+        return node
+
+    return walk(params)
+
+
+def make_train_step(model, opt_cfg: OptConfig, microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, aux = model.loss(params, batch)
+        return loss, aux
+
+    def train_step(state: TrainState, batch: dict):
+        params = state["params"]
+        if microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc, aux_acc = carry
+                (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                aux_acc = {
+                    k: aux_acc.get(k, 0.0) + v
+                    for k, v in aux.items()
+                    if isinstance(v, jax.Array)
+                }
+                return (g_acc, l_acc + l, aux_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = _python_accum(acc_step, g0, micro, microbatches)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+
+        new_params, new_opt, metrics = adamw_update(grads, state["opt"], params, opt_cfg)
+        new_params = _update_router_bias(new_params, aux)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def _python_accum(acc_step, g0, micro, n):
+    """Unrolled accumulation (microbatch trees may be ragged pytrees)."""
+    carry = (g0, jnp.zeros(()), {})
+    for i in range(n):
+        mb = jax.tree.map(lambda x: x[i], micro)
+        carry, _ = acc_step(carry, mb)
+    return carry, None

@@ -1,0 +1,143 @@
+"""AdamW with sharded/quantized state — no optax dependency.
+
+Features used at scale (DESIGN.md §6):
+* moment dtype: fp32 (default), bf16, or blockwise-int8 ("q8") — the q8
+  path stores m/v as int8 with one fp32 scale per 256-element block (the
+  8-bit-Adam trick), cutting optimizer HBM 4x for the deepseek-v3 cell.
+* ZeRO-1: moments get an *additional* sharding over spare mesh axes via
+  with_sharding_constraint (see zero1_pspecs in launch/dryrun.py).
+* global-norm clipping, linear-warmup + cosine schedule, decoupled weight
+  decay (skipped for norms/bias via dimensionality: decay only ndim >= 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Q_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"  # "float32" | "bfloat16" | "q8"
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 moment codec
+# ---------------------------------------------------------------------------
+def _q8_encode(x: jax.Array) -> dict:
+    """Blockwise int8 over the LAST axis only — leading dims (and their
+    shardings: experts/heads/mlp) are preserved, so quantized moments shard
+    exactly like their parameters (no GSPMD resharding in the update)."""
+    x = x.astype(jnp.float32)
+    last = x.shape[-1] if x.ndim else 1
+    block = min(Q_BLOCK, last) if last else 1
+    pad = (-last) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = x.reshape(*x.shape[:-1], -1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0 + 1e-20
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _q8_decode(enc: dict, shape, dtype=jnp.float32) -> jax.Array:
+    x = (enc["q"].astype(jnp.float32) * enc["scale"])
+    x = x.reshape(*x.shape[:-2], -1)  # merge (blocks, block)
+    last = shape[-1] if shape else 1
+    return x[..., :last].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# state init / update
+# ---------------------------------------------------------------------------
+def _zeros_like_state(p: jax.Array, cfg: OptConfig):
+    if cfg.state_dtype == "q8":
+        last = p.shape[-1] if p.ndim else 1
+        block = min(Q_BLOCK, last) if last else 1
+        nblocks = max(1, (last + block - 1) // block)
+        lead = p.shape[:-1] if p.ndim else ()
+        return {
+            "q": jnp.zeros((*lead, nblocks, block), jnp.int8),
+            "scale": jnp.zeros((*lead, nblocks, 1), jnp.float32),
+        }
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    return jnp.zeros(p.shape, dt)
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: _zeros_like_state(p, cfg), params),
+        "v": jax.tree.map(lambda p: _zeros_like_state(p, cfg), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Any, opt_state: dict, params: Any, cfg: OptConfig
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+
+    is_q8 = cfg.state_dtype == "q8"
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_f = _q8_decode(m, p.shape) if is_q8 else m.astype(jnp.float32)
+        v_f = _q8_decode(v, p.shape) if is_q8 else v.astype(jnp.float32)
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd_ = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        if p.ndim >= 2:
+            upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+        m_new = _q8_encode(m_f) if is_q8 else m_f.astype(m.dtype)
+        v_new = _q8_encode(v_f) if is_q8 else v_f.astype(v.dtype)
+        return p_new, m_new, v_new
+
+    is_leaf = (lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}) if is_q8 else None
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(opt_state["m"], is_leaf=is_leaf)[0]
+    flat_v = jax.tree.flatten(opt_state["v"], is_leaf=is_leaf)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,15 @@
+"""Shared pytest config.
+
+JAX compilation caches accumulate across the suite (10 architectures x
+train/serve graphs) and can OOM a 35 GB host in one process; clear them
+between modules.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

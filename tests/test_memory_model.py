@@ -1,0 +1,80 @@
+"""Paper §II + Appendix A: memory-optimized routing theory."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import memory_model as mm
+
+
+def test_paper_headline_numbers():
+    """§II: N=2^20, F=2^13, C=256 -> conventional 160k bits/neuron vs ~1.2k
+    per side at the optimum (the paper quotes the per-side figure)."""
+    conv = mm.conventional_bits(2**20, 2**13)
+    assert conv == pytest.approx(163840.0)
+    opt_total = mm.mem_at_optimal_m(2**20, 2**13, 256)
+    per_side = opt_total / 2.0  # MEM_S == MEM_T at M*
+    assert per_side < 1200.0
+    assert conv / opt_total > 70.0  # >70x reduction even counting both sides
+
+
+def test_paper_design_point_m_star():
+    """Appendix A: C=256, alpha=1, F=5040, N=1e10 -> M* ~ 144, F/M ~ 35."""
+    m = mm.optimal_m(1e10, 5040, 256)
+    assert m == pytest.approx(144.67, abs=0.5)
+    assert 5040 / m == pytest.approx(34.8, abs=0.5)
+
+
+def test_constraint_c_lower_bound():
+    """Appendix A: F=5000, N=1e10 -> clusters need C >= ~152."""
+    c = mm.constraint_c_lower_bound(1e10, 5000)
+    assert 130 <= c <= 175
+    assert mm.feasible(1e10, 5000, 256)
+
+
+@given(
+    n=st.integers(2**12, 2**24),
+    f=st.integers(64, 2**13),
+    c=st.sampled_from([64, 128, 256, 512, 1024]),
+)
+@settings(max_examples=60, deadline=None)
+def test_m_star_minimizes_memory(n, f, c):
+    """Property: eq.(5)'s M* is the argmin of eq.(3) over M."""
+    m_star = mm.optimal_m(n, f, c)
+    best = mm.mem_total_bits_alpha(n, f, c, m_star)
+    for mult in (0.5, 0.8, 1.25, 2.0):
+        m = max(1.0, m_star * mult)
+        assert mm.mem_total_bits_alpha(n, f, c, m) >= best - 1e-6
+
+
+@given(
+    n=st.integers(2**12, 2**22),
+    f=st.integers(64, 2**12),
+    c=st.sampled_from([128, 256, 512]),
+    alpha=st.sampled_from([0.5, 1.0, 2.0, 4.0]),
+)
+@settings(max_examples=60, deadline=None)
+def test_eq6_matches_eq3_at_optimum(n, f, c, alpha):
+    """Closed form (eq.6 generalized) equals eq.(3) evaluated at M*."""
+    m_star = mm.optimal_m(n, f, c, alpha)
+    assert mm.mem_at_optimal_m(n, f, c, alpha) == pytest.approx(
+        mm.mem_total_bits_alpha(n, f, c, m_star, alpha), rel=1e-9
+    )
+
+
+@given(n=st.integers(2**14, 2**24), f=st.integers(256, 2**13))
+@settings(max_examples=40, deadline=None)
+def test_optimized_beats_conventional(n, f):
+    """For biologically-plausible fan-outs the scheme always wins (C=256)."""
+    if not mm.feasible(n, f, 256):
+        return
+    assert mm.mem_at_optimal_m(n, f, 256) < mm.conventional_bits(n, f)
+
+
+def test_sram_cam_split_matches_prototype():
+    p = mm.paper_prototype_params()
+    assert p.k == 256 and p.n_clusters == 4
+    # prototype: fan-out 4k via 64-way CAM words/neuron (K*M/C = 64)
+    assert p.cam_words_per_neuron == 64
+    assert p.stage1_fanout == 64

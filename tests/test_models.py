@@ -1,0 +1,156 @@
+"""Layer-level equivalences: attention paths, MLA, Mamba2, RWKV6, MoE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as at
+from repro.models.mla import init_mla, init_mla_cache, mla_layer
+from repro.models.moe import init_moe, moe_local, moe_reference
+from repro.models.rwkv import init_rwkv6, init_rwkv6_state, rwkv6_layer
+from repro.models.ssm import init_mamba2, init_mamba2_state, mamba2_layer
+
+
+@pytest.mark.parametrize("window", [None, 17])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_chunked_attention_equals_dense(window, softcap):
+    rng = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 2, 130, 8, 2, 16
+    q = jax.random.normal(rng, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, KV, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    d = at.attend_dense(q, k, v, pos, pos, window=window, scale=0.25, softcap=softcap)
+    c = at.attend_chunked(
+        q, k, v, pos, pos, window=window, scale=0.25, softcap=softcap, block_q=32, block_k=32
+    )
+    np.testing.assert_allclose(np.asarray(d), np.asarray(c), atol=2e-6)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_attention_prefill_decode_equals_full(window):
+    cfg = ModelConfig(d_model=64, n_heads=8, n_kv_heads=2, head_dim=16, qk_norm=True)
+    params = at.init_attention(jax.random.PRNGKey(3), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, 64))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, _ = at.attention_layer(params, x, pos, cfg, window=window)
+    cache = at.init_kv_cache(B, S, 2, 16, window, jnp.float32)
+    out, cache = at.attention_layer(params, x[:, :8], pos[:, :8], cfg, window=window, cache=cache)
+    outs = [out]
+    for t in range(8, S):
+        o, cache = at.attention_layer(
+            params, x[:, t : t + 1], pos[:, t : t + 1], cfg, window=window, cache=cache
+        )
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(full), atol=2e-5
+    )
+
+
+def test_mla_absorbed_decode_equals_naive():
+    cfg = ModelConfig(
+        d_model=64, n_heads=4, q_lora_rank=24, kv_lora_rank=16,
+        qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8,
+    )
+    params = init_mla(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 64))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, _ = mla_layer(params, x, pos, cfg)
+    cache = init_mla_cache(B, S, cfg, jnp.float32)
+    out, cache = mla_layer(params, x[:, :6], pos[:, :6], cfg, cache)
+    outs = [out]
+    for t in range(6, S):
+        o, cache = mla_layer(params, x[:, t : t + 1], pos[:, t : t + 1], cfg, cache)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(full), atol=2e-5
+    )
+
+
+def test_mamba2_chunked_equals_sequential_and_decode():
+    cfg = ModelConfig(d_model=32, ssm_state=8, ssm_expand=2, ssm_heads=4, ssm_chunk=16)
+    params = init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 50
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    y_seq, _ = mamba2_layer(params, u, cfg, sequential=True)
+    y_chk, _ = mamba2_layer(params, u, cfg)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_chk), atol=2e-5)
+    st = init_mamba2_state(B, cfg)
+    y_p, st = mamba2_layer(params, u[:, :30], cfg, state=st)
+    outs = [y_p]
+    for t in range(30, S):
+        o, st = mamba2_layer(params, u[:, t : t + 1], cfg, state=st)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(y_seq), atol=2e-5
+    )
+
+
+def test_rwkv6_chunked_equals_sequential_and_decode():
+    cfg = ModelConfig(d_model=32, n_heads=4, ssm_chunk=8, rwkv_lora_w=8, rwkv_lora_mix=4)
+    params = init_rwkv6(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 36
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    y_seq, _ = rwkv6_layer(params, x, cfg, sequential=True)
+    y_chk, _ = rwkv6_layer(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_chk), atol=2e-5)
+    st = init_rwkv6_state(B, cfg)
+    y_p, st = rwkv6_layer(params, x[:, :20], cfg, state=st)
+    outs = [y_p]
+    for t in range(20, S):
+        o, st = rwkv6_layer(params, x[:, t : t + 1], cfg, state=st)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(y_seq), atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("aux_free", [True, False])
+def test_moe_local_equals_reference(aux_free):
+    cfg = ModelConfig(
+        d_model=32, n_experts=8, top_k=2, moe_d_ff=16, capacity_factor=8.0,
+        router_aux_free=aux_free,
+    )
+    params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, 32))
+    y_ref, aux_r = moe_reference(params, x, cfg)
+    y_loc, aux_l = moe_local(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_loc), atol=2e-6)
+    assert bool((aux_r["load"] == aux_l["load"]).all())
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    """With capacity 1 most assignments drop; output stays finite and the
+    kept assignments still route correctly."""
+    cfg = ModelConfig(d_model=16, n_experts=4, top_k=2, moe_d_ff=8, capacity_factor=1.0)
+    params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    y, _ = moe_local(params, x, cfg, capacity=1)
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_head_padding_is_exact():
+    """Zero-weight padded heads (TP-divisibility trick) leave outputs exact."""
+    import dataclasses
+
+    cfg = ModelConfig(d_model=64, n_heads=6, n_kv_heads=2, head_dim=16)
+    cfg_p = dataclasses.replace(cfg, n_heads=8)
+    params = at.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    # GQA-aware padding: zero heads go at the END OF EACH KV GROUP
+    # (group size 3 -> 4), otherwise heads change kv-group membership.
+    idx = jnp.asarray([g * 4 + i for g in range(2) for i in range(3)])
+    padded = {
+        "wq": jnp.zeros((64, 8, 16)).at[:, idx].set(params["wq"]),
+        "wk": params["wk"],
+        "wv": params["wv"],
+        "wo": jnp.zeros((8, 16, 64)).at[idx].set(params["wo"]),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 64))
+    pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+    y0, _ = at.attention_layer(params, x, pos, cfg, window=None)
+    y1, _ = at.attention_layer(padded, x, pos, cfg_p, window=None)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-6)

@@ -1,0 +1,89 @@
+"""Sharding resolver + q8 codec unit/property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.train.optimizer import _q8_decode, _q8_encode
+
+
+class _FakeMesh:
+    """Duck-typed mesh: resolver only touches .shape."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+MESH = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_heads_shard_when_divisible():
+    spec = shd.resolve(("embed", "heads", "head_dim"), (4608, 32, 128), MESH)
+    assert spec == P(None, "model", None)
+
+
+def test_small_attention_replicates_not_row_parallel():
+    """gemma3-1b: 4 heads, tiny weight -> fully replicated (B1 policy)."""
+    spec = shd.resolve(("embed", "heads", "head_dim"), (1152, 4, 256), MESH)
+    assert spec == P(None, None, None)
+
+
+def test_large_non_divisible_heads_fall_back_to_embed():
+    """yi-34b: 56 heads, 51M elements -> row-parallel on embed."""
+    spec = shd.resolve(("embed", "heads", "head_dim"), (7168, 56, 128), MESH)
+    assert spec == P("model", None, None)
+
+
+def test_experts_prefer_widest_mesh():
+    spec = shd.resolve((None, "experts", "embed", "mlp"), (58, 256, 7168, 2048), MESH)
+    assert spec[1] == ("data", "model")  # EP256 in-pod
+    spec64 = shd.resolve((None, "experts", "embed", "mlp"), (27, 64, 2048, 1408), MESH)
+    assert spec64[1] == "model"  # 64 experts -> EP16
+
+
+def test_vocab_in_never_shards_vocab():
+    spec = shd.resolve(("vocab_in", "embed"), (129280, 7168), MESH)
+    assert spec == P(None, "model")
+    out = shd.resolve(("vocab", "embed"), (129280, 7168), MESH)
+    assert out == P("model", None)
+
+
+def test_batch_pspec_degrades_gracefully():
+    assert shd.batch_pspec(256, MESH) == P(("pod", "data"))
+    assert shd.batch_pspec(16, MESH) == P(("data",))  # 16 % 32 != 0
+    assert shd.batch_pspec(1, MESH) == P(None)
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    y = shd.constrain(x, ("batch", "model"))
+    assert y is x
+
+
+# ---------------------------------------------------------------------------
+@given(
+    shape=st.sampled_from([(7,), (3, 5), (2, 4, 300), (1, 257), (256,), (2, 512)]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=40, deadline=None)
+def test_q8_roundtrip_error_bound(shape, seed):
+    """Blockwise int8: |x - dec(enc(x))| <= scale/2 = max|block|/254."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=shape) * 10.0, jnp.float32)
+    enc = _q8_encode(x)
+    dec = _q8_decode(enc, x.shape)
+    assert dec.shape == x.shape
+    err = np.abs(np.asarray(dec - x))
+    bound = float(jnp.abs(x).max()) / 127.0 * 0.51 + 1e-6
+    assert err.max() <= bound
+
+
+def test_q8_preserves_leading_dims():
+    x = jnp.ones((58, 16, 32, 300), jnp.bfloat16)
+    enc = _q8_encode(x)
+    assert enc["q"].shape[:3] == (58, 16, 32)  # leading dims intact
+    assert enc["q"].shape[-1] <= 256

@@ -1,0 +1,74 @@
+"""Network compiler: routing tables must reproduce requested connectivity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tags import NetworkSpec, SynapseType, compile_network
+
+
+def _random_spec(seed, n=64, cluster=16, k=64, edges=80):
+    rng = np.random.default_rng(seed)
+    spec = NetworkSpec(
+        n_neurons=n, cluster_size=cluster, k_tags=k, max_cam_words=32, max_sram_entries=16
+    )
+    want = set()
+    for _ in range(edges):
+        s, d = int(rng.integers(n)), int(rng.integers(n))
+        syn = int(rng.integers(4))
+        if (s, d) in {(a, b) for a, b, _ in want}:
+            continue
+        want.add((s, d, syn))
+        spec.connect(s, d, syn)
+    return spec, want
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_compiled_tables_reproduce_connectivity(seed):
+    spec, want = _random_spec(seed)
+    tables = compile_network(spec)
+    got = {(int(s), int(d), int(t)) for s, d, t in tables.dense_equivalent()}
+    assert got == want
+
+
+def test_shared_tag_group_semantics():
+    """A shared-tag population: every source reaches every target; tag count
+    is 1 per destination cluster (weight sharing keeps K constant)."""
+    spec = NetworkSpec(n_neurons=32, cluster_size=8, k_tags=8, max_cam_words=8)
+    srcs = [0, 1, 2, 3]
+    tgts = [(16, SynapseType.FAST_EXC), (17, SynapseType.FAST_EXC)]
+    spec.connect_group(srcs, tgts, shared_tag=True)
+    tables = compile_network(spec)
+    got = {(int(s), int(d)) for s, d, _ in tables.dense_equivalent()}
+    assert got == {(s, d) for s in srcs for d in (16, 17)}
+    # one tag allocated in cluster 2, one CAM word per target
+    assert (tables.cam_tag[16] >= 0).sum() == 1
+    assert (tables.src_tag[0] >= 0).sum() == 1
+
+
+def test_tag_overflow_raises():
+    spec = NetworkSpec(n_neurons=32, cluster_size=8, k_tags=2, max_cam_words=8)
+    spec.connect(0, 16)
+    spec.connect(1, 17)
+    with pytest.raises(ValueError, match="tag overflow"):
+        spec.connect(2, 18)
+        compile_network(spec)
+
+
+def test_cam_overflow_raises():
+    spec = NetworkSpec(n_neurons=32, cluster_size=8, k_tags=8, max_cam_words=2)
+    for s in range(3):
+        spec.connect(s, 16)
+    with pytest.raises(ValueError, match="CAM capacity"):
+        compile_network(spec)
+
+
+def test_memory_accounting_counts_occupied_entries():
+    spec = NetworkSpec(n_neurons=32, cluster_size=8, k_tags=8, max_cam_words=8)
+    spec.connect(0, 16)
+    tables = compile_network(spec)
+    # 1 SRAM entry: log2(8) tag + log2(4 clusters) = 3 + 2 bits
+    assert tables.sram_bits() == 5
+    # 1 CAM word: log2(8) tag + 2 synapse-type bits
+    assert tables.cam_bits() == 5
