@@ -26,11 +26,8 @@ def run() -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(7)
     cc0 = compile_poker_cnn()
     eng0 = EventEngine(cc0.tables, params)
-    acts = []
-    for sym in range(4):
-        a, _ = pool_activity(cc0, eng0, symbol_events(sym, 400, rng))
-        acts.append(a)
-    acts = np.stack(acts)
+    # all 4 class presentations as one batched dispatch
+    acts, _ = pool_activity(cc0, eng0, [symbol_events(sym, 400, rng) for sym in range(4)])
     sel = acts - acts.mean(0, keepdims=True)
     fc_select = np.stack([np.argsort(-sel[c])[:64] for c in range(4)])
     cc = compile_poker_cnn(CnnConfig(), fc_select=fc_select)
@@ -41,9 +38,11 @@ def run() -> list[tuple[str, float, str]]:
     t0 = time.perf_counter()
     eval_rng = np.random.default_rng(99)
     n = 8
-    for i in range(n):
-        sym = i % 4
-        _, out = pool_activity(cc, eng, symbol_events(sym, 400, eval_rng), t_steps)
+    syms = [i % 4 for i in range(n)]
+    _, outs = pool_activity(
+        cc, eng, [symbol_events(sym, 400, eval_rng) for sym in syms], t_steps
+    )  # one batched dispatch for the whole eval set
+    for sym, out in zip(syms, outs):
         counts = out.sum((0, 2))
         correct += int(np.argmax(counts)) == sym
         cum = out.sum(2).cumsum(0)

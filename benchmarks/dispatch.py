@@ -45,4 +45,30 @@ def run() -> list[tuple[str, float, str]]:
             y = f(params, x)
         jax.block_until_ready(y)
         out.append((f"dispatch_{name}_wall", (time.perf_counter() - t0) / 10 * 1e6, "us"))
+
+    # batched event delivery (core/dispatch.py backends): events/s vs batch
+    # size for the full stage-1 + stage-2 path on the chip's core geometry.
+    from repro.core.dispatch import get_backend
+
+    rng = np.random.default_rng(0)
+    n, cluster, k, s = 512, 256, 512, 32
+    src_tag = jnp.asarray(rng.integers(0, k, (n, 8)), jnp.int32)
+    src_dest = jnp.asarray(rng.integers(0, n // cluster, (n, 8)), jnp.int32)
+    cam_tag = jnp.asarray(rng.integers(-1, k, (n, s)), jnp.int32)
+    cam_syn = jnp.asarray(rng.integers(0, 4, (n, s)), jnp.int32)
+    backend = get_backend("reference")
+    events_per_stream = int(src_tag.size)
+    for b in (1, 8, 64):
+        spikes = jnp.asarray(rng.random((b, n)) < 0.5, jnp.float32)
+        f = jax.jit(
+            lambda sp: backend.deliver(sp, src_tag, src_dest, cam_tag, cam_syn, cluster, k)
+        )
+        jax.block_until_ready(f(spikes))
+        t0 = time.perf_counter()
+        for _ in range(10):
+            y = f(spikes)
+        jax.block_until_ready(y)
+        us = (time.perf_counter() - t0) / 10 * 1e6
+        ev_s = b * events_per_stream / (us / 1e6)
+        out.append((f"deliver_reference_B{b}", us, f"{ev_s / 1e6:.1f}Mev_s"))
     return out

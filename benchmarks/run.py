@@ -6,13 +6,19 @@
   beyond-paper (MoE dispatch mapping) -> dispatch
   §Roofline artifacts -> roofline
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and writes the routing/dispatch rows
+to ``BENCH_routing.json`` (machine-readable perf trajectory across PRs).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+# modules whose rows land in BENCH_routing.json (the event-delivery hot path)
+_ROUTING_MODULES = ("routing_throughput", "dispatch")
 
 
 def main() -> None:
@@ -37,14 +43,30 @@ def main() -> None:
     ]
     print("name,us_per_call,derived")
     failed = 0
+    failed_routing = False
+    routing_rows: list[dict] = []
     for name, mod in modules:
         try:
             for row, us, derived in mod.run():
                 print(f"{row},{us:.1f},{derived}")
+                if name in _ROUTING_MODULES:
+                    routing_rows.append(
+                        {"module": name, "name": row, "us_per_call": round(us, 2),
+                         "derived": derived}
+                    )
         except Exception:  # noqa: BLE001 — report per-bench failures, keep going
             failed += 1
+            failed_routing |= name in _ROUTING_MODULES
             print(f"{name},nan,FAILED", file=sys.stderr)
             traceback.print_exc()
+    json_path = os.environ.get("BENCH_ROUTING_JSON", "BENCH_routing.json")
+    if failed_routing:  # keep the last good trajectory instead of clobbering it
+        print(f"routing benchmark failed; NOT rewriting {json_path}", file=sys.stderr)
+    else:
+        with open(json_path, "w") as f:
+            json.dump({"rows": routing_rows}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(routing_rows)} routing rows to {json_path}", file=sys.stderr)
     if failed:
         raise SystemExit(f"{failed} benchmark modules failed")
 

@@ -39,12 +39,25 @@ def symbol_events(symbol: int, n_events: int, rng, jitter: float = 1.0) -> np.nd
     return np.stack([np.clip(ys, 0, 31).astype(int), np.clip(xs, 0, 31).astype(int)], 1)
 
 
-def pool_activity(cc, eng, events, t_steps=40, drive=10.0):
-    act = cc.input_activity(events) / t_steps * drive
-    inp = jnp.broadcast_to(jnp.asarray(act), (t_steps, *act.shape))
-    _, spikes = eng.run(eng.init_state(), inp)
-    s = np.asarray(spikes)
-    return s[:, cc.pool[0]: cc.pool[1]].sum(0), s[:, cc.out[0]: cc.out[1]].reshape(t_steps, 4, -1)
+def pool_activity(cc, eng, event_streams, t_steps=40, drive=10.0):
+    """Run DVS streams through the engine in ONE batched dispatch.
+
+    ``event_streams``: list of B event arrays -> per-stream pool rates
+    [B, 256] and output spikes [B, t_steps, 4, 64]. A single [n_ev, 2]
+    array is treated as a batch of one and returned unbatched.
+    """
+    single = not isinstance(event_streams, (list, tuple))
+    if single:
+        event_streams = [event_streams]
+    act = cc.input_activity_batch(event_streams) / t_steps * drive  # [B, nc, K]
+    inp = jnp.broadcast_to(jnp.asarray(act)[None], (t_steps, *act.shape))
+    _, spikes = eng.run(eng.init_state(batch=len(event_streams)), inp)
+    s = np.asarray(spikes)  # [T, B, N]
+    pool = s[:, :, cc.pool[0]: cc.pool[1]].sum(0)
+    out = np.moveaxis(
+        s[:, :, cc.out[0]: cc.out[1]].reshape(t_steps, len(event_streams), 4, -1), 1, 0
+    )
+    return (pool[0], out[0]) if single else (pool, out)
 
 
 def main():
@@ -59,14 +72,10 @@ def main():
     cc0 = compile_poker_cnn()
     eng0 = EventEngine(cc0.tables, params)
     print(f"Table-V network: {cc0.tables.n_neurons} neurons on {cc0.tables.n_clusters} cores")
-    acts = []
-    for sym in range(4):
-        a = np.zeros(256)
-        for _ in range(3):  # 3 training presentations per class
-            pa, _ = pool_activity(cc0, eng0, symbol_events(sym, 400, rng))
-            a += pa
-        acts.append(a)
-    acts = np.stack(acts)  # [4, 256]
+    # all 4 classes x 3 presentations = 12 streams in ONE batched run
+    streams = [symbol_events(sym, 400, rng) for sym in range(4) for _ in range(3)]
+    pa, _ = pool_activity(cc0, eng0, streams)  # [12, 256]
+    acts = pa.reshape(4, 3, -1).sum(1)  # [4, 256]
     selectivity = acts - acts.mean(0, keepdims=True)
     fc_select = np.stack([np.argsort(-selectivity[c])[:64] for c in range(4)])
     print("Hebbian-selected pool neurons per class:",
@@ -82,8 +91,12 @@ def main():
     t0 = time.time()
     eval_rng = np.random.default_rng(1234)
     for trial in range(trials):
+        # one batched dispatch per trial: the 4 suits are 4 concurrent streams
+        _, outs = pool_activity(
+            cc, eng, [symbol_events(sym, 400, eval_rng) for sym in range(4)], t_steps
+        )
         for sym in range(4):
-            _, out = pool_activity(cc, eng, symbol_events(sym, 400, eval_rng), t_steps)
+            out = outs[sym]  # [T, 4, 64]
             counts = out.sum((0, 2))
             pred = int(np.argmax(counts))
             correct += pred == sym

@@ -4,7 +4,9 @@ Demonstrates the paper's §II claim end-to-end:
   1. describe clustered connectivity,
   2. compile to distributed SRAM/CAM routing tables,
   3. run the event engine and verify against dense connectivity,
-  4. compare memory against conventional (flat-address) routing.
+  4. compare memory against conventional (flat-address) routing,
+  5. serve a batch of independent event streams in one dispatch
+     (the batched, backend-pluggable delivery path).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -68,6 +70,25 @@ def main():
     )
     ref = np.einsum("dst,s->dt", dense, s)
     print(f"two-stage == dense connectivity: max err = {np.abs(np.asarray(drive) - ref).max():.2e}")
+
+    # batched serving: B independent event streams through ONE dispatch.
+    # Each stream stimulates a different core; spikes stay per-stream.
+    b = 4
+    inp_b = jnp.zeros((80, b, tables.n_clusters, tables.k_tags))
+    for stream in range(b):
+        inp_b = inp_b.at[:, stream, stream % 4, :6].set(6.0)
+    carry_b, spikes_b = eng.run(eng.init_state(batch=b), inp_b)
+    per_stream = np.asarray(spikes_b).sum(axis=(0, 2)).astype(int)
+    print(f"\nbatched run (B={b}, one stimulus core per stream): "
+          f"spikes per stream = {per_stream}")
+    # stream 0 stimulates core 0 exactly like the single run above
+    assert np.allclose(np.asarray(spikes_b)[:, 0], np.asarray(spikes)), "stream 0 != single run"
+    print("stream 0 of the batch reproduces the single-stream run exactly")
+
+    from repro.core.dispatch import available_backends
+
+    print(f"dispatch backends available: {', '.join(available_backends())} "
+          "(EventEngine(tables, backend=...))")
 
 
 if __name__ == "__main__":

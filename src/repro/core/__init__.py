@@ -5,12 +5,34 @@ Public surface of the paper's contribution:
 - ``memory_model``: §II equations (memory-optimal routing design points)
 - ``tags``: network compiler -> distributed SRAM/CAM routing tables
 - ``two_stage``: executable stage-1 scatter + stage-2 CAM match (JAX)
+- ``dispatch``: pluggable batched dispatch backends (reference/pallas/sharded)
 - ``neuron``: AdExp-I&F + 4-type DPI synapse dynamics
 - ``event_engine``: scan-able SNN engine, sharded via shard_map
 - ``routing``: analytical R1/R2/R3 fabric model (latency/energy/traffic)
 - ``cnn``: spiking-CNN compiler (paper §V application)
+- ``shard_compat``: version-portable shard_map import + kwargs
 """
 
-from repro.core import cnn, event_engine, memory_model, neuron, routing, tags, two_stage
+from repro.core import (
+    cnn,
+    dispatch,
+    event_engine,
+    memory_model,
+    neuron,
+    routing,
+    shard_compat,
+    tags,
+    two_stage,
+)
 
-__all__ = ["cnn", "event_engine", "memory_model", "neuron", "routing", "tags", "two_stage"]
+__all__ = [
+    "cnn",
+    "dispatch",
+    "event_engine",
+    "memory_model",
+    "neuron",
+    "routing",
+    "shard_compat",
+    "tags",
+    "two_stage",
+]

@@ -68,8 +68,16 @@ class CompiledCnn:
     out: tuple[int, int]
     conv_clusters: tuple[int, ...]
 
-    def input_activity(self, events_yx: np.ndarray) -> np.ndarray:
-        """DVS events [n_ev, 2] of (y, x) -> external tag activity [n_clusters, K]."""
+    def input_activity(self, events_yx) -> np.ndarray:
+        """DVS events -> external tag activity.
+
+        ``events_yx`` is either one stream ``[n_ev, 2]`` of (y, x) rows,
+        giving ``[n_clusters, K]``, or a sequence of B streams (one per DVS
+        sensor / user), giving batched activity ``[B, n_clusters, K]`` ready
+        for the batched engine.
+        """
+        if isinstance(events_yx, (list, tuple)):
+            return self.input_activity_batch(events_yx)
         c = self.cfg
         a = np.zeros((self.tables.n_clusters, c.k_tags), dtype=np.float32)
         if len(events_yx) == 0:
@@ -79,6 +87,10 @@ class CompiledCnn:
         for cl in self.conv_clusters:
             a[cl, : c.input_hw * c.input_hw] += counts
         return a
+
+    def input_activity_batch(self, event_streams) -> np.ndarray:
+        """B DVS streams (each [n_ev_i, 2]) -> batched activity [B, n_clusters, K]."""
+        return np.stack([self.input_activity(np.asarray(ev)) for ev in event_streams])
 
 
 def edge_kernels(k: int = 8) -> np.ndarray:

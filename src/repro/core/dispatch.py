@@ -1,0 +1,260 @@
+"""Pluggable dispatch backends for batched event delivery (DESIGN.md §9).
+
+A dispatch backend turns (spikes, routing tables, external tag activity)
+into per-neuron synaptic drive — the full stage-1 + stage-2 path of the
+paper — for a whole batch of concurrent event streams at once. All backends
+consume ``spikes [..., N]`` / ``external_activity [..., n_clusters, K]`` and
+return ``drive [..., N, N_SYN_TYPES]``; they differ only in *where* the
+stage-2 CAM match runs:
+
+  * ``reference`` — pure-jnp gather/einsum (oracle, CPU default)
+  * ``pallas``    — the kernels/cam_match TPU kernel, grid (B, cluster,
+                    neuron-tile): the activity row stays VMEM-pinned per
+                    cluster while neurons and batch tile the MXU
+  * ``sharded``   — shard_map over a 2-D mesh (batch over ``data``,
+                    clusters over ``model``): stage-1 partials are
+                    reduce-scattered to the owning cluster slab (the
+                    R2/R3 point-to-point hop), stage-2 is fully local
+
+Backends are selected by name through :func:`get_backend` — this registry
+replaces the old ``use_kernel`` bool and the ad-hoc kernel import that used
+to live inside ``two_stage_deliver``. Third-party backends can register via
+:func:`register_backend`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.two_stage import N_SYN_TYPES, stage1_route, stage2_cam_match
+
+__all__ = [
+    "DispatchBackend",
+    "ReferenceBackend",
+    "PallasBackend",
+    "ShardedBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a :class:`DispatchBackend` under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(spec: str | DispatchBackend | None = "reference", **options) -> DispatchBackend:
+    """Resolve a backend by name (constructing it with ``options``) or pass
+    an already-constructed instance through unchanged."""
+    if isinstance(spec, DispatchBackend):
+        if options:
+            raise ValueError(
+                f"backend options {sorted(options)} ignored: {spec.name!r} was "
+                "passed as an instance — configure it at construction instead"
+            )
+        return spec
+    if spec is None:
+        spec = "reference"
+    try:
+        cls = _REGISTRY[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown dispatch backend {spec!r}; available: {available_backends()}"
+        ) from None
+    return cls(**options)
+
+
+class DispatchBackend:
+    """Interface: batched stage-1 scatter shared, stage-2 pluggable."""
+
+    name = "abstract"
+
+    # -- stage 2 -----------------------------------------------------------
+    def cam_match(
+        self,
+        activity: jax.Array,  # [..., n_clusters, K]
+        cam_tag: jax.Array,  # [N, S]
+        cam_syn: jax.Array,  # [N, S]
+        cluster_size: int,
+    ) -> jax.Array:  # [..., N, N_SYN_TYPES]
+        raise NotImplementedError
+
+    # -- full delivery -----------------------------------------------------
+    def deliver(
+        self,
+        spikes: jax.Array,  # [..., N]
+        src_tag: jax.Array,
+        src_dest: jax.Array,
+        cam_tag: jax.Array,
+        cam_syn: jax.Array,
+        cluster_size: int,
+        k_tags: int,
+        external_activity: jax.Array | None = None,
+    ) -> jax.Array:
+        n = spikes.shape[-1]
+        a = stage1_route(spikes, src_tag, src_dest, n // cluster_size, k_tags)
+        if external_activity is not None:
+            a = a + external_activity
+        return self.cam_match(a, cam_tag, cam_syn, cluster_size)
+
+
+@register_backend("reference")
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend(DispatchBackend):
+    """Pure-jnp stage 2 (gather + one-hot einsum)."""
+
+    def cam_match(self, activity, cam_tag, cam_syn, cluster_size):
+        return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size)
+
+
+@register_backend("pallas")
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(DispatchBackend):
+    """Stage 2 on the kernels/cam_match Pallas kernel.
+
+    ``interpret=None`` (default) follows the platform policy of
+    kernels/cam_match/ops: compiled kernel on TPU, fast jnp reference on
+    other platforms — same behavior the old ``use_kernel`` bool had.
+    ``interpret=True`` forces the kernel in interpret mode anywhere
+    (slow — CPU validation only). ``block_c`` tiles neurons within a
+    cluster; see kernels/cam_match.
+    """
+
+    block_c: int = 16
+    interpret: bool | None = None
+
+    def cam_match(self, activity, cam_tag, cam_syn, cluster_size):
+        if self.interpret is None:
+            from repro.kernels.cam_match import ops as cam_ops
+
+            return cam_ops.cam_match(
+                activity, cam_tag, cam_syn, cluster_size, block_c=self.block_c
+            )
+        from repro.kernels.cam_match.cam_match import cam_match_pallas
+
+        return cam_match_pallas(
+            activity, cam_tag, cam_syn, cluster_size, block_c=self.block_c,
+            interpret=self.interpret,
+        )
+
+
+def sharded_local_deliver(
+    spikes: jax.Array,  # [..., N_local] this device's neuron slab
+    src_tag: jax.Array,
+    src_dest: jax.Array,
+    cam_tag: jax.Array,
+    cam_syn: jax.Array,
+    cluster_size: int,
+    n_clusters: int,  # GLOBAL cluster count (stage-1 targets any cluster)
+    k_tags: int,
+    cluster_axis: str,
+    external_activity: jax.Array | None = None,  # [..., n_clusters/n_dev, K]
+) -> jax.Array:
+    """Per-device delivery body shared by ShardedBackend and
+    ``EventEngine.make_sharded_step`` (runs INSIDE shard_map).
+
+    Stage 1 scatters this device's sources into a partial activity matrix
+    covering ALL clusters; the reduce-scatter over ``cluster_axis`` hands
+    each owner its slab (the R2/R3 point-to-point hop); stage 2 is local.
+    """
+    a_partial = stage1_route(spikes, src_tag, src_dest, n_clusters, k_tags)
+    a_local = jax.lax.psum_scatter(
+        a_partial, cluster_axis, scatter_dimension=a_partial.ndim - 2, tiled=True
+    )
+    if external_activity is not None:
+        a_local = a_local + external_activity
+    return stage2_cam_match(a_local, cam_tag, cam_syn, cluster_size)
+
+
+@register_backend("sharded")
+class ShardedBackend(DispatchBackend):
+    """Full delivery under shard_map on a 2-D (batch, cluster) mesh.
+
+    ``batch_axis`` shards event streams (data parallel — no communication),
+    ``cluster_axis`` shards clusters/cores (model parallel — stage-1 partial
+    activity is reduce-scattered to the slab owner, DESIGN.md §2). A 1x1
+    default mesh makes the backend runnable — and testable — on one device.
+    """
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh | None = None,
+        batch_axis: str = "data",
+        cluster_axis: str = "model",
+    ):
+        if mesh is None:
+            mesh = jax.make_mesh((1, 1), (batch_axis, cluster_axis))
+        self.mesh = mesh
+        self.batch_axis = batch_axis
+        self.cluster_axis = cluster_axis
+
+    def cam_match(self, activity, cam_tag, cam_syn, cluster_size):
+        # stage 2 alone is embarrassingly parallel; the interesting
+        # communication lives in deliver(). Reference semantics here.
+        return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size)
+
+    def deliver(
+        self,
+        spikes,
+        src_tag,
+        src_dest,
+        cam_tag,
+        cam_syn,
+        cluster_size,
+        k_tags,
+        external_activity=None,
+    ):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.shard_compat import SM_CHECK_KW, shard_map
+
+        # normalize any leading batch shape (incl. none) to one flat B
+        batch_shape = spikes.shape[:-1]
+        n = spikes.shape[-1]
+        spikes = spikes.reshape(-1, n)
+        b = spikes.shape[0]
+        n_clusters = n // cluster_size
+        n_cl_dev = self.mesh.shape[self.cluster_axis]
+        n_b_dev = self.mesh.shape[self.batch_axis]
+        assert n_clusters % n_cl_dev == 0, (n_clusters, n_cl_dev)
+        assert b % n_b_dev == 0, (b, n_b_dev)
+        if external_activity is None:
+            external_activity = jnp.zeros((b, n_clusters, k_tags), spikes.dtype)
+        else:  # broadcast shared (unbatched) stimulus like the other backends
+            external_activity = jnp.broadcast_to(
+                external_activity, (*batch_shape, n_clusters, k_tags)
+            ).reshape(b, n_clusters, k_tags)
+
+        ba, ca = self.batch_axis, self.cluster_axis
+
+        def local(spk, s_tag, s_dest, c_tag, c_syn, ext):
+            return sharded_local_deliver(
+                spk, s_tag, s_dest, c_tag, c_syn, cluster_size, n_clusters,
+                k_tags, ca, external_activity=ext,
+            )
+
+        f = shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(ba, ca), P(ca), P(ca), P(ca), P(ca), P(ba, ca)),
+            out_specs=P(ba, ca),
+            **SM_CHECK_KW,
+        )
+        drive = f(spikes, src_tag, src_dest, cam_tag, cam_syn, external_activity)
+        return drive.reshape(*batch_shape, n, N_SYN_TYPES)

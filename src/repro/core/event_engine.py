@@ -8,14 +8,25 @@ The engine is the executable model of the whole DYNAPs fabric:
 External stimulation (the chip's Input Interface) enters as tag activity
 (events addressed to (cluster, tag)), exactly like the FPGA path in Fig. 7.
 
-``EventEngine.run`` scans over a [T, n_clusters, K] input-event tensor.
+The whole path is batch-native (DESIGN.md §9): carry and inputs may bear a
+leading batch dimension ``B`` — B independent event streams (users / DVS
+sensors) stepped against one set of routing tables in a single dispatch.
+``EventEngine.run`` scans over a ``[T, n_clusters, K]`` (or batched
+``[T, B, n_clusters, K]``) input-event tensor. Delivery is delegated to a
+pluggable dispatch backend (core/dispatch.py): ``reference`` (pure jnp),
+``pallas`` (TPU kernel), or ``sharded`` (2-D-mesh shard_map), selected by
+name — this replaces the old ``use_kernel`` bool.
+
 ``dense_reference_step`` is the oracle: the same network as one dense
-[N, N, 4] connectivity tensor (used by tests to prove routing equivalence).
+[N, N, 4] connectivity tensor (used by tests to prove routing equivalence),
+batched the same way.
 
 For multi-device execution, ``make_sharded_step`` shards clusters (cores)
-across the mesh's device axis with ``shard_map``: stage-1 scatter produces a
-partial activity matrix per device which is reduce-scattered over the cluster
-axis — the TPU analogue of point-to-point R2/R3 traffic (DESIGN.md §2).
+across a mesh axis with ``shard_map``: stage-1 scatter produces a partial
+activity matrix per device which is reduce-scattered over the cluster axis
+— the TPU analogue of point-to-point R2/R3 traffic (DESIGN.md §2). With
+``batch_axis`` set it runs on a 2-D mesh, sharding event streams over the
+data axis as well.
 """
 
 from __future__ import annotations
@@ -28,15 +39,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import neuron as neuron_mod
-from repro.models.moe import _SM_CHECK_KW
+from repro.core.dispatch import DispatchBackend, get_backend
 from repro.core.neuron import NeuronParams, NeuronState
+from repro.core.shard_compat import SM_CHECK_KW, shard_map
 from repro.core.tags import RoutingTables
-from repro.core.two_stage import (
-    N_SYN_TYPES,
-    stage1_route,
-    stage2_cam_match,
-    two_stage_deliver,
-)
+from repro.core.two_stage import N_SYN_TYPES
 
 __all__ = ["EventEngine", "dense_weights_from_tables", "dense_reference_step"]
 
@@ -61,14 +68,15 @@ class EventEngine:
         self,
         tables: RoutingTables,
         params: NeuronParams | None = None,
-        use_kernel: bool = False,
+        backend: str | DispatchBackend = "reference",
+        backend_options: dict | None = None,
     ):
         self.params = params or NeuronParams()
         self.cluster_size = tables.cluster_size
         self.k_tags = tables.k_tags
         self.n_neurons = tables.n_neurons
         self.n_clusters = tables.n_clusters
-        self.use_kernel = use_kernel
+        self.backend = get_backend(backend, **(backend_options or {}))
         self.tables = _Tables(
             src_tag=jnp.asarray(tables.src_tag),
             src_dest=jnp.asarray(tables.src_dest),
@@ -77,22 +85,25 @@ class EventEngine:
         )
 
     # ------------------------------------------------------------------
-    def init_state(self) -> tuple[NeuronState, jax.Array]:
-        """(neuron state, previous-step spikes)."""
+    def init_state(
+        self, batch: int | tuple[int, ...] | None = None
+    ) -> tuple[NeuronState, jax.Array]:
+        """(neuron state, previous-step spikes); batched when ``batch`` set."""
+        lead = () if batch is None else (batch,) if isinstance(batch, int) else tuple(batch)
         return (
-            neuron_mod.init_state(self.n_neurons, self.params),
-            jnp.zeros((self.n_neurons,), jnp.float32),
+            neuron_mod.init_state(self.n_neurons, self.params, batch=batch),
+            jnp.zeros((*lead, self.n_neurons), jnp.float32),
         )
 
     @partial(jax.jit, static_argnums=0)
     def step(
         self,
         carry: tuple[NeuronState, jax.Array],
-        input_activity: jax.Array,  # [n_clusters, K] external events this step
+        input_activity: jax.Array,  # [..., n_clusters, K] external events this step
         i_ext: jax.Array | None = None,
     ) -> tuple[tuple[NeuronState, jax.Array], jax.Array]:
         state, prev_spikes = carry
-        drive = two_stage_deliver(
+        drive = self.backend.deliver(
             prev_spikes,
             self.tables.src_tag,
             self.tables.src_dest,
@@ -101,7 +112,6 @@ class EventEngine:
             self.cluster_size,
             self.k_tags,
             external_activity=input_activity,
-            use_kernel=self.use_kernel,
         )
         state, spikes = neuron_mod.neuron_step(state, drive, self.params, i_ext)
         return (state, spikes), spikes
@@ -109,10 +119,10 @@ class EventEngine:
     def run(
         self,
         carry: tuple[NeuronState, jax.Array],
-        input_events: jax.Array,  # [T, n_clusters, K]
+        input_events: jax.Array,  # [T, ..., n_clusters, K]
         i_ext: jax.Array | None = None,
     ) -> tuple[tuple[NeuronState, jax.Array], jax.Array]:
-        """Scan T steps; returns (final carry, spikes [T, N])."""
+        """Scan T steps; returns (final carry, spikes [T, ..., N])."""
 
         def body(c, inp):
             return self.step(c, inp, i_ext)
@@ -120,19 +130,23 @@ class EventEngine:
         return jax.lax.scan(body, carry, input_events)
 
     # ------------------------------------------------------------------
-    def make_sharded_step(self, mesh: jax.sharding.Mesh, axis: str = "data"):
+    def make_sharded_step(
+        self,
+        mesh: jax.sharding.Mesh,
+        axis: str = "data",
+        batch_axis: str | None = None,
+    ):
         """shard_map step with clusters sharded over ``axis``.
 
         Neurons, CAM tables and neuron state are sharded by cluster slab;
         stage-1 partial activity is reduce-scattered across devices (the
         R2/R3 point-to-point hop), stage-2 and dynamics are fully local.
+
+        With ``batch_axis`` set the mesh is 2-D: event streams shard over
+        ``batch_axis`` (pure data parallelism) while clusters shard over
+        ``axis``; all carried arrays then bear a leading batch dim.
         """
         from jax.sharding import PartitionSpec as P
-
-        try:
-            from jax import shard_map
-        except ImportError:  # older jax
-            from jax.experimental.shard_map import shard_map
 
         n_dev = mesh.shape[axis]
         assert self.n_clusters % n_dev == 0, "clusters must divide device axis"
@@ -140,34 +154,42 @@ class EventEngine:
         cluster_size, k_tags = self.cluster_size, self.k_tags
         n_clusters = self.n_clusters
 
+        from repro.core.dispatch import sharded_local_deliver
+
         def local_step(tables, state, prev_spikes, input_activity, i_ext):
-            # prev_spikes: local slab [N/n_dev]; tables rows local.
-            a_partial = stage1_route(
-                prev_spikes, tables.src_tag, tables.src_dest, n_clusters, k_tags
+            # prev_spikes: local slab [..., N/n_dev]; tables rows local.
+            drive = sharded_local_deliver(
+                prev_spikes,
+                tables.src_tag,
+                tables.src_dest,
+                tables.cam_tag,
+                tables.cam_syn,
+                cluster_size,
+                n_clusters,
+                k_tags,
+                axis,
+                external_activity=input_activity,
             )
-            # point-to-point hop: every device contributes events for every
-            # cluster; scatter-reduce so the owner core receives its slab.
-            a_local = jax.lax.psum_scatter(
-                a_partial, axis, scatter_dimension=0, tiled=True
-            )
-            a_local = a_local + input_activity
-            drive = stage2_cam_match(a_local, tables.cam_tag, tables.cam_syn, cluster_size)
             state, spikes = neuron_mod.neuron_step(state, drive, params, i_ext)
             return state, spikes
 
-        spec_n = P(axis)  # shard leading (neuron / cluster) dim
+        spec_t = P(axis)  # tables: shard rows (neurons) over the cluster axis
+        if batch_axis is None:
+            spec_c = P(axis)  # unbatched carry: leading dim is neurons
+        else:
+            spec_c = P(batch_axis, axis)  # batched carry: [B, N_local, ...]
         return shard_map(
             local_step,
             mesh=mesh,
             in_specs=(
-                _Tables(spec_n, spec_n, spec_n, spec_n),
-                NeuronState(spec_n, spec_n, spec_n, spec_n),
-                spec_n,
-                spec_n,
-                spec_n,
+                _Tables(spec_t, spec_t, spec_t, spec_t),
+                NeuronState(spec_c, spec_c, spec_c, spec_c),
+                spec_c,
+                spec_c,
+                spec_c,
             ),
-            out_specs=(NeuronState(spec_n, spec_n, spec_n, spec_n), spec_n),
-            **_SM_CHECK_KW,
+            out_specs=(NeuronState(spec_c, spec_c, spec_c, spec_c), spec_c),
+            **SM_CHECK_KW,
         )
 
 
@@ -185,14 +207,14 @@ def dense_weights_from_tables(tables: RoutingTables) -> np.ndarray:
 
 def dense_reference_step(
     dense_w: jax.Array,  # [N, N, 4]
-    prev_spikes: jax.Array,  # [N]
+    prev_spikes: jax.Array,  # [..., N]
     state: NeuronState,
     params: NeuronParams,
-    external_drive: jax.Array | None = None,  # [N, 4]
+    external_drive: jax.Array | None = None,  # [..., N, 4]
     i_ext: jax.Array | None = None,
 ):
     """Oracle step: dense matmul delivery instead of two-stage routing."""
-    drive = jnp.einsum("dst,s->dt", dense_w, prev_spikes)
+    drive = jnp.einsum("dst,...s->...dt", dense_w, prev_spikes)
     if external_drive is not None:
         drive = drive + external_drive
     return neuron_mod.neuron_step(state, drive, params, i_ext)

@@ -47,10 +47,10 @@ class NeuronParams:
 
 @dataclasses.dataclass
 class NeuronState:
-    v: jax.Array  # [N] membrane potential
-    w: jax.Array  # [N] adaptation variable
-    refrac: jax.Array  # [N] remaining refractory time
-    i_syn: jax.Array  # [N, 4] DPI filter states
+    v: jax.Array  # [..., N] membrane potential
+    w: jax.Array  # [..., N] adaptation variable
+    refrac: jax.Array  # [..., N] remaining refractory time
+    i_syn: jax.Array  # [..., N, 4] DPI filter states
 
 
 jax.tree_util.register_dataclass(
@@ -58,22 +58,34 @@ jax.tree_util.register_dataclass(
 )
 
 
-def init_state(n: int, params: NeuronParams, dtype=jnp.float32) -> NeuronState:
+def init_state(
+    n: int,
+    params: NeuronParams,
+    dtype=jnp.float32,
+    batch: int | tuple[int, ...] | None = None,
+) -> NeuronState:
+    """Fresh state for ``n`` neurons; ``batch`` prepends leading batch dims
+    (B independent network instances sharing one set of routing tables)."""
+    lead = () if batch is None else (batch,) if isinstance(batch, int) else tuple(batch)
     return NeuronState(
-        v=jnp.full((n,), params.v_rest, dtype=dtype),
-        w=jnp.zeros((n,), dtype=dtype),
-        refrac=jnp.zeros((n,), dtype=dtype),
-        i_syn=jnp.zeros((n, N_SYN_TYPES), dtype=dtype),
+        v=jnp.full((*lead, n), params.v_rest, dtype=dtype),
+        w=jnp.zeros((*lead, n), dtype=dtype),
+        refrac=jnp.zeros((*lead, n), dtype=dtype),
+        i_syn=jnp.zeros((*lead, n, N_SYN_TYPES), dtype=dtype),
     )
 
 
 def neuron_step(
     state: NeuronState,
-    drive: jax.Array,  # [N, 4] matched-event weight per synapse type (stage-2 output)
+    drive: jax.Array,  # [..., N, 4] matched-event weight per synapse type (stage-2 output)
     params: NeuronParams,
-    i_ext: jax.Array | None = None,  # [N] external (DC) input current
+    i_ext: jax.Array | None = None,  # [..., N] external (DC) input current
 ) -> tuple[NeuronState, jax.Array]:
-    """One exponential-Euler step; returns (new_state, spikes[N] float32)."""
+    """One exponential-Euler step; returns (new_state, spikes[..., N] float32).
+
+    Purely elementwise over the leading dims, so a batched state steps all
+    instances at once with no outer vmap.
+    """
     p = params
     dt = p.dt
     taus = jnp.asarray(p.tau_syn, dtype=state.i_syn.dtype)
@@ -83,7 +95,7 @@ def neuron_step(
     decay = jnp.exp(-dt / taus)
     i_syn = state.i_syn * decay + drive * ws
 
-    i_fast, i_slow, i_sub, i_shunt = (i_syn[:, k] for k in range(N_SYN_TYPES))
+    i_fast, i_slow, i_sub, i_shunt = (i_syn[..., k] for k in range(N_SYN_TYPES))
     exc = i_fast + i_slow
     leak_gain = 1.0 + p.shunt_gain * i_shunt  # shunting = divisive inhibition
     i_in = p.input_gain * (exc - i_sub)

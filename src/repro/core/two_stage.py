@@ -14,12 +14,20 @@ its event weight to the synapse-type accumulator of its neuron. This is the
 compute hot-spot and has a Pallas kernel (kernels/cam_match); the functions
 here are the pure-jnp implementations used as reference and CPU fallback.
 
+Both stages are **batch-native** (DESIGN.md §9): ``spikes`` may carry any
+leading batch shape ``[..., N]`` (many concurrent event streams / network
+instances over shared routing tables), producing ``A[..., n_clusters, K]``
+and drive ``[..., N, 4]``. The batch dimension is carried through a single
+scatter / gather, not an outer ``vmap``, so backends can tile it natively.
+
 The same two functions implement MoE dispatch in models/moe.py:
 clusters = expert groups, tags = expert ids, CAM subscription = expert
 residency. See DESIGN.md §3.
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -30,50 +38,69 @@ N_SYN_TYPES = 4  # fast-exc, slow-exc, subtractive-inh, shunting-inh
 
 
 def stage1_route(
-    spikes: jax.Array,  # [N] float event weights (0/1 spikes or rates)
+    spikes: jax.Array,  # [..., N] float event weights (0/1 spikes or rates)
     src_tag: jax.Array,  # [N, E] int32, -1 = empty
     src_dest: jax.Array,  # [N, E] int32 cluster ids
     n_clusters: int,
     k_tags: int,
 ) -> jax.Array:
-    """Scatter stage-1 events into the tag-activity matrix ``A[n_clusters, K]``."""
+    """Scatter stage-1 events into the tag-activity matrix ``A[..., n_clusters, K]``.
+
+    The routing tables are shared across the batch (one compiled network,
+    many event streams); each batch element scatters into its own slab of a
+    single flat accumulator, so the whole batch is one scatter-add.
+    """
     valid = src_tag >= 0
-    # flat index into A; invalid entries are routed out of range and dropped.
-    flat = jnp.where(valid, src_dest * k_tags + src_tag, n_clusters * k_tags)
-    weights = spikes[:, None] * valid.astype(spikes.dtype)
-    a = jnp.zeros((n_clusters * k_tags,), dtype=spikes.dtype)
-    a = a.at[flat.reshape(-1)].add(weights.reshape(-1), mode="drop")
-    return a.reshape(n_clusters, k_tags)
+    size = n_clusters * k_tags
+    # flat index into A; invalid entries are routed to a sentinel slot.
+    flat = jnp.where(valid, src_dest * k_tags + src_tag, size)  # [N, E]
+    weights = spikes[..., None] * valid.astype(spikes.dtype)  # [..., N, E]
+    batch_shape = spikes.shape[:-1]
+    if not batch_shape:
+        a = jnp.zeros((size,), dtype=spikes.dtype)
+        a = a.at[flat.reshape(-1)].add(weights.reshape(-1), mode="drop")
+        return a.reshape(n_clusters, k_tags)
+    b = math.prod(batch_shape)
+    # per-batch slab of width size+1: slot ``size`` absorbs invalid entries.
+    offsets = jnp.arange(b, dtype=flat.dtype)[:, None] * (size + 1)
+    flat_b = flat.reshape(1, -1) + offsets  # [B, N*E]
+    a = jnp.zeros((b * (size + 1),), dtype=spikes.dtype)
+    a = a.at[flat_b.reshape(-1)].add(weights.reshape(b, -1).reshape(-1), mode="drop")
+    a = a.reshape(b, size + 1)[:, :size]
+    return a.reshape(*batch_shape, n_clusters, k_tags)
 
 
 def stage2_cam_match(
-    activity: jax.Array,  # [n_clusters, K]
+    activity: jax.Array,  # [..., n_clusters, K]
     cam_tag: jax.Array,  # [N, S] int32, -1 = empty
     cam_syn: jax.Array,  # [N, S] int32 in [0, N_SYN_TYPES)
     cluster_size: int,
 ) -> jax.Array:
-    """Broadcast + CAM match: returns synaptic drive ``I[N, N_SYN_TYPES]``.
+    """Broadcast + CAM match: returns synaptic drive ``I[..., N, N_SYN_TYPES]``.
 
     Pure-jnp reference; the Pallas kernel in kernels/cam_match computes the
-    same quantity blocked over (cluster, neuron-tile) with the activity row
-    pinned in VMEM.
+    same quantity blocked over (batch, cluster, neuron-tile) with the
+    activity row pinned in VMEM.
     """
     n, s = cam_tag.shape
-    n_clusters, k = activity.shape
+    n_clusters, k = activity.shape[-2:]
+    batch_shape = activity.shape[:-2]
     assert n == n_clusters * cluster_size, (n, n_clusters, cluster_size)
     # [n_clusters, C, S] view of the CAM; gather each cluster's activity row.
     tags = cam_tag.reshape(n_clusters, cluster_size, s)
     valid = tags >= 0
-    vals = jnp.take_along_axis(
-        activity[:, None, :].repeat(cluster_size, axis=1),
-        jnp.clip(tags, 0, k - 1),
-        axis=2,
+    idx = jnp.clip(tags, 0, k - 1)
+    rows = jnp.broadcast_to(
+        activity[..., :, None, :], (*batch_shape, n_clusters, cluster_size, k)
     )
-    vals = jnp.where(valid, vals, 0.0)  # [n_clusters, C, S]
+    vals = jnp.take_along_axis(
+        rows, jnp.broadcast_to(idx, (*batch_shape, n_clusters, cluster_size, s)), axis=-1
+    )
+    vals = jnp.where(valid, vals, jnp.zeros((), activity.dtype))  # [..., nc, C, S]
     syn = cam_syn.reshape(n_clusters, cluster_size, s)
-    onehot = jax.nn.one_hot(syn, N_SYN_TYPES, dtype=vals.dtype)  # [.., S, T]
-    out = jnp.einsum("ncs,ncst->nct", vals, onehot)
-    return out.reshape(n, N_SYN_TYPES)
+    onehot = jax.nn.one_hot(syn, N_SYN_TYPES, dtype=vals.dtype)  # [nc, C, S, T]
+    out = jnp.einsum("...ncs,ncst->...nct", vals, onehot)
+    return out.reshape(*batch_shape, n, N_SYN_TYPES)
 
 
 def two_stage_deliver(
@@ -85,20 +112,24 @@ def two_stage_deliver(
     cluster_size: int,
     k_tags: int,
     external_activity: jax.Array | None = None,
-    use_kernel: bool = False,
+    backend: str | object = "reference",
 ) -> jax.Array:
     """Full event delivery: spikes -> synaptic drive per neuron & synapse type.
 
     ``external_activity`` injects input events (the chip's Input Interface /
-    FPGA path) directly as tag activity.
+    FPGA path) directly as tag activity. ``backend`` selects the dispatch
+    implementation by name or instance (core/dispatch.py registry); it
+    replaces the old ``use_kernel`` bool.
     """
-    n = spikes.shape[0]
-    n_clusters = n // cluster_size
-    a = stage1_route(spikes, src_tag, src_dest, n_clusters, k_tags)
-    if external_activity is not None:
-        a = a + external_activity
-    if use_kernel:
-        from repro.kernels.cam_match import ops as cam_ops
+    from repro.core.dispatch import get_backend
 
-        return cam_ops.cam_match(a, cam_tag, cam_syn, cluster_size)
-    return stage2_cam_match(a, cam_tag, cam_syn, cluster_size)
+    return get_backend(backend).deliver(
+        spikes,
+        src_tag,
+        src_dest,
+        cam_tag,
+        cam_syn,
+        cluster_size,
+        k_tags,
+        external_activity=external_activity,
+    )

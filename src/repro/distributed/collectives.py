@@ -22,6 +22,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.shard_compat import axis_size
+
 
 # ---------------------------------------------------------------------------
 # hierarchical all-reduce (inside shard_map)
@@ -32,7 +34,7 @@ def hierarchical_all_reduce(x: jax.Array, inner_axis: str, outer_axis: str) -> j
     Equivalent to ``jax.lax.psum(x, (inner_axis, outer_axis))`` — tests assert
     bit-equivalence (up to fp reduction order).
     """
-    n_inner = jax.lax.axis_size(inner_axis)
+    n_inner = axis_size(inner_axis)
     orig_shape = x.shape
     n = x.size
     flat = x.reshape(-1)
@@ -67,8 +69,8 @@ def hierarchical_all_to_all(x: jax.Array, inner_axis: str, outer_axis: str) -> j
     then moves each byte exactly once (no multi-hop forwarding on the slow
     fabric) — the R3 XY-routing argument.
     """
-    n_inner = jax.lax.axis_size(inner_axis)
-    n_outer = jax.lax.axis_size(outer_axis)
+    n_inner = axis_size(inner_axis)
+    n_outer = axis_size(outer_axis)
     n_total = n_inner * n_outer
     assert x.shape[0] == n_total, (x.shape, n_total)
     rest = x.shape[1:]
@@ -108,7 +110,7 @@ def ef_all_reduce(
     the cross-pod all-reduce runs on int8 with the quantization residual
     carried in ``error`` to the next step. Returns (averaged grad, new error).
     """
-    n_outer = jax.lax.axis_size(outer_axis)
+    n_outer = axis_size(outer_axis)
     x = grad + error
     q, scale = compress_int8(x)
     sent = decompress_int8(q, scale, x.dtype)

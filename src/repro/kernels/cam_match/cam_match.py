@@ -10,9 +10,13 @@ a one-hot compare matrix contracted on the MXU:
     vals[c, s]     = sum_k match[c, s, k] * A[k]     # match-line AND activity
     drive[c, t]    = sum_s vals[c, s] * (cam_syn[c, s] == t)
 
-The kernel processes one cluster's activity row per grid step (pinned in
-VMEM — the "broadcast within the core"), tiling neurons so the compare plane
-(block_c * S * K floats) stays within VMEM. All events of a timestep that
+The kernel is batch-native: the grid is ``(B, cluster, neuron-tile)``. One
+(batch, cluster) pair's activity row is pinned in VMEM per grid step (the
+"broadcast within the core"), while neurons tile within the cluster so the
+compare plane (block_c * S * K floats) stays within VMEM. The CAM tables are
+shared across the batch — the same neuron tile is revisited for every batch
+element with only the [1, K] activity row changing, so B tiles the MXU
+without growing the VMEM-resident CAM state. All events of a timestep that
 target one core are therefore resolved against VMEM-resident state, exactly
 the paper's "CAM cells of different cores operate in parallel" argument.
 
@@ -23,6 +27,7 @@ alignment; interpret mode (CPU validation) accepts any shape.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -32,11 +37,11 @@ N_SYN_TYPES = 4
 
 
 def _cam_match_kernel(activity_ref, tag_ref, syn_ref, out_ref, *, k_tags: int):
-    # activity_ref: [1, K]      — this cluster's broadcast tag activity
-    # tag_ref:      [1, Cb, S]  — CAM tags of the neuron tile
-    # syn_ref:      [1, Cb, S]  — synapse types of the neuron tile
-    # out_ref:      [1, Cb, 4]  — per-type synaptic drive
-    a = activity_ref[0, :]  # [K]
+    # activity_ref: [1, 1, K]     — this (batch, cluster)'s broadcast activity
+    # tag_ref:      [1, Cb, S]    — CAM tags of the neuron tile (batch-shared)
+    # syn_ref:      [1, Cb, S]    — synapse types of the neuron tile
+    # out_ref:      [1, 1, Cb, 4] — per-type synaptic drive
+    a = activity_ref[0, 0, :]  # [K]
     tags = tag_ref[0]  # [Cb, S] int32
     syn = syn_ref[0]  # [Cb, S] int32
     cb, s = tags.shape
@@ -62,38 +67,43 @@ def _cam_match_kernel(activity_ref, tag_ref, syn_ref, out_ref, *, k_tags: int):
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
     ).reshape(cb, N_SYN_TYPES)
-    out_ref[0] = drive.astype(out_ref.dtype)
+    out_ref[0, 0] = drive.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("cluster_size", "block_c", "interpret"))
 def cam_match_pallas(
-    activity: jax.Array,  # [n_clusters, K]
+    activity: jax.Array,  # [..., n_clusters, K]
     cam_tag: jax.Array,  # [N, S]
     cam_syn: jax.Array,  # [N, S]
     cluster_size: int,
     block_c: int = 16,
     interpret: bool = True,
-) -> jax.Array:
+) -> jax.Array:  # [..., N, N_SYN_TYPES]
     n, s = cam_tag.shape
-    n_clusters, k = activity.shape
+    n_clusters, k = activity.shape[-2:]
+    batch_shape = activity.shape[:-2]
+    b = math.prod(batch_shape)
     assert n == n_clusters * cluster_size
     block_c = min(block_c, cluster_size)
     assert cluster_size % block_c == 0, (cluster_size, block_c)
 
+    act3 = activity.reshape(b, n_clusters, k)
     tags3 = cam_tag.reshape(n_clusters, cluster_size, s)
     syn3 = cam_syn.reshape(n_clusters, cluster_size, s)
-    grid = (n_clusters, cluster_size // block_c)
+    grid = (b, n_clusters, cluster_size // block_c)
 
     out = pl.pallas_call(
         functools.partial(_cam_match_kernel, k_tags=k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, block_c, s), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, block_c, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda bi, i, j: (bi, i, 0)),
+            pl.BlockSpec((1, block_c, s), lambda bi, i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c, s), lambda bi, i, j: (i, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_c, N_SYN_TYPES), lambda i, j: (i, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_clusters, cluster_size, N_SYN_TYPES), activity.dtype),
+        out_specs=pl.BlockSpec((1, 1, block_c, N_SYN_TYPES), lambda bi, i, j: (bi, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, n_clusters, cluster_size, N_SYN_TYPES), activity.dtype
+        ),
         interpret=interpret,
-    )(activity, tags3, syn3)
-    return out.reshape(n, N_SYN_TYPES)
+    )(act3, tags3, syn3)
+    return out.reshape(*batch_shape, n, N_SYN_TYPES)

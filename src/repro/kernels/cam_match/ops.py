@@ -2,7 +2,11 @@
 
 Chooses kernel vs reference by platform: the Pallas kernel targets TPU; on
 CPU we validate it in interpret mode (slow) and default to the jnp oracle
-for actual compute unless ``force_kernel`` is set.
+for actual compute unless ``force_kernel`` is set. Batch-native: accepts
+``activity [..., n_clusters, K]`` and returns ``[..., N, 4]``.
+
+Most callers should go through the dispatch-backend registry
+(repro.core.dispatch) instead of calling this directly.
 """
 
 from __future__ import annotations

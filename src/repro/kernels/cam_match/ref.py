@@ -9,35 +9,25 @@ with empty CAM words (``cam_tag < 0``) contributing nothing. This is the
 "broadcast the event to all nodes of the core; every matching CAM word fires
 its pulse generator" operation, summed over one timestep's worth of events
 (``activity[c, k]`` = number/weight of events with tag ``k`` delivered to
-cluster ``c``).
+cluster ``c``). Batch-native: ``activity`` may carry leading batch dims,
+resolved against the same (batch-shared) CAM tables.
+
+The implementation IS ``core.two_stage.stage2_cam_match`` — one algorithm,
+re-exported here so kernel tests name their oracle without caring where the
+production jnp path lives (and so the two can never drift apart).
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-N_SYN_TYPES = 4
+from repro.core.two_stage import N_SYN_TYPES, stage2_cam_match  # noqa: F401
 
 
 def cam_match_ref(
-    activity: jax.Array,  # [n_clusters, K] float
+    activity: jax.Array,  # [..., n_clusters, K] float
     cam_tag: jax.Array,  # [N, S] int32, -1 empty
     cam_syn: jax.Array,  # [N, S] int32 in [0, 4)
     cluster_size: int,
-) -> jax.Array:  # [N, 4] same dtype as activity
-    n, s = cam_tag.shape
-    n_clusters, k = activity.shape
-    assert n == n_clusters * cluster_size
-    tags = cam_tag.reshape(n_clusters, cluster_size, s)
-    valid = tags >= 0
-    rows = activity[:, None, :]  # [n_clusters, 1, K]
-    vals = jnp.take_along_axis(
-        jnp.broadcast_to(rows, (n_clusters, cluster_size, k)),
-        jnp.clip(tags, 0, k - 1),
-        axis=2,
-    )
-    vals = jnp.where(valid, vals, jnp.zeros((), activity.dtype))
-    syn = cam_syn.reshape(n_clusters, cluster_size, s)
-    onehot = jax.nn.one_hot(syn, N_SYN_TYPES, dtype=activity.dtype)
-    return jnp.einsum("ncs,ncst->nct", vals, onehot).reshape(n, N_SYN_TYPES)
+) -> jax.Array:  # [..., N, 4] same dtype as activity
+    return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size)

@@ -307,6 +307,8 @@ def run_cell(arch: str, shape: Shape, multi_pod: bool, opt_cfg: OptConfig | None
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     coll_hlo = hlo_collective_bytes(hlo)
     # analytic (scan-aware) cost from the traced jaxpr

@@ -30,16 +30,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-try:  # jax >= 0.8 renamed check_rep -> check_vma
-    import inspect
-
-    _SM_CHECK_KW = (
-        {"check_vma": False}
-        if "check_vma" in inspect.signature(jax.shard_map).parameters
-        else {"check_rep": False}
-    )
-except Exception:  # pragma: no cover
-    _SM_CHECK_KW = {}
+# version-portable shard_map kwargs live in core (shared with event_engine)
+from repro.core.shard_compat import SM_CHECK_KW as _SM_CHECK_KW
+from repro.core.shard_compat import axis_size as _axis_size
 
 # ---------------------------------------------------------------------------
 # params
@@ -177,7 +170,7 @@ def _axes_tuple(axes):
 def _axes_size(axes) -> int:
     n = 1
     for a in _axes_tuple(axes):
-        n *= jax.lax.axis_size(a)
+        n *= _axis_size(a)
     return n
 
 
@@ -185,7 +178,7 @@ def _axes_linear_index(axes) -> jax.Array:
     """Linearized rank over a tuple of mesh axes (row-major, like P(axes))."""
     idx = jnp.zeros((), jnp.int32)
     for a in _axes_tuple(axes):
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -292,10 +285,7 @@ def moe_block_sharded(params: dict, x3: jax.Array, cfg, mesh, model_axis: str = 
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
-    try:
-        from jax import shard_map as _shard_map
-    except ImportError:  # older jax
-        from jax.experimental.shard_map import shard_map as _shard_map
+    from repro.core.shard_compat import shard_map as _shard_map
 
     ep = ep_axes_for(cfg, mesh, model_axis)
     if not ep:  # tiny config / 1-device mesh: local dispatch

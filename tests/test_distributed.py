@@ -27,10 +27,11 @@ def test_hierarchical_collectives_match_flat():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.core.shard_compat import SM_CHECK_KW, shard_map
         from repro.distributed.collectives import (
             hierarchical_all_reduce, hierarchical_all_to_all)
         mesh = jax.make_mesh((2, 4), ("pod", "data"))
-        sm = lambda f, i, o: jax.shard_map(f, mesh=mesh, in_specs=i, out_specs=o, check_vma=False)
+        sm = lambda f, i, o: shard_map(f, mesh=mesh, in_specs=i, out_specs=o, **SM_CHECK_KW)
         x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 37)), jnp.float32)
         h = sm(lambda v: hierarchical_all_reduce(v, "data", "pod"), P(("pod","data")), P(("pod","data")))(x)
         f = sm(lambda v: jax.lax.psum(v, ("pod","data")), P(("pod","data")), P(("pod","data")))(x)
@@ -48,14 +49,15 @@ def test_ef_compression_unbiased_over_time():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.core.shard_compat import SM_CHECK_KW, shard_map
         from repro.distributed.collectives import ef_all_reduce
         mesh = jax.make_mesh((2, 4), ("pod", "data"))
         g = jnp.asarray(np.random.default_rng(2).normal(size=(8, 16)), jnp.float32)
-        step = jax.shard_map(lambda gg, ee: ef_all_reduce(gg, ee, "pod"), mesh=mesh,
+        step = shard_map(lambda gg, ee: ef_all_reduce(gg, ee, "pod"), mesh=mesh,
             in_specs=(P(("pod","data")), P(("pod","data"))),
-            out_specs=(P(("pod","data")), P(("pod","data"))), check_vma=False)
-        true = jax.shard_map(lambda gg: jax.lax.pmean(gg, "pod"), mesh=mesh,
-            in_specs=P(("pod","data")), out_specs=P(("pod","data")), check_vma=False)(g)
+            out_specs=(P(("pod","data")), P(("pod","data"))), **SM_CHECK_KW)
+        true = shard_map(lambda gg: jax.lax.pmean(gg, "pod"), mesh=mesh,
+            in_specs=P(("pod","data")), out_specs=P(("pod","data")), **SM_CHECK_KW)(g)
         err = jnp.zeros_like(g); acc = jnp.zeros_like(g)
         for _ in range(20):
             red, err = step(g, err); acc += red
@@ -109,6 +111,41 @@ def test_sharded_event_engine_matches_local():
         for _ in range(10):
             (state_l, prev_l), spikes_l = eng.step((state, prev), inp)
             state_s, spikes_s = sharded(eng.tables, state, prev, inp, jnp.zeros((64,)))
+            assert float(jnp.abs(spikes_l - spikes_s).max()) < 1e-6
+            assert float(jnp.abs(state_l.v - state_s.v).max()) < 1e-6
+            state, prev = state_l, spikes_l
+        print("OK")
+    """)
+
+
+def test_sharded_event_engine_batched_2d_mesh():
+    """Batched make_sharded_step on a 2-D (batch x cluster) mesh matches the
+    local batched engine step: streams shard over `data`, clusters over
+    `model`, stage-1 reduce-scatter runs per-stream."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.tags import NetworkSpec, compile_network
+        from repro.core.event_engine import EventEngine
+        rng = np.random.default_rng(0)
+        spec = NetworkSpec(n_neurons=64, cluster_size=8, k_tags=64, max_cam_words=32, max_sram_entries=16)
+        seen = set()
+        for _ in range(80):
+            s, d = int(rng.integers(64)), int(rng.integers(64))
+            if (s, d) in seen: continue
+            seen.add((s, d)); spec.connect(s, d, int(rng.integers(4)))
+        tables = compile_network(spec)
+        eng = EventEngine(tables)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        sharded = eng.make_sharded_step(mesh, "model", batch_axis="data")
+        b = 4
+        state, prev = eng.init_state(batch=b)
+        inp = jnp.zeros((b, tables.n_clusters, tables.k_tags))
+        for stream in range(b):  # heterogeneous stimuli per stream
+            inp = inp.at[stream, stream % tables.n_clusters, :4].set(4.0)
+        i_ext = jnp.zeros((b, 64))
+        for _ in range(10):
+            (state_l, prev_l), spikes_l = eng.step((state, prev), inp)
+            state_s, spikes_s = sharded(eng.tables, state, prev, inp, i_ext)
             assert float(jnp.abs(spikes_l - spikes_s).max()) < 1e-6
             assert float(jnp.abs(state_l.v - state_s.v).max()) < 1e-6
             state, prev = state_l, spikes_l
