@@ -7,6 +7,7 @@ shape. Dense dispatch stores a [T, E, cap] combine tensor; two-stage stores
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -16,12 +17,14 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.moe import init_moe, moe_local, moe_reference
 
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
+
 
 def run() -> list[tuple[str, float, str]]:
     out = []
     cfg = ModelConfig(d_model=256, n_experts=32, top_k=4, moe_d_ff=128, capacity_factor=1.5)
     params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
-    t = 2048
+    t = 256 if SMOKE else 2048
     x = jax.random.normal(jax.random.PRNGKey(1), (t, cfg.d_model))
 
     # routing-state bytes
@@ -58,7 +61,7 @@ def run() -> list[tuple[str, float, str]]:
     cam_syn = jnp.asarray(rng.integers(0, 4, (n, s)), jnp.int32)
     backend = get_backend("reference")
     events_per_stream = int(src_tag.size)
-    for b in (1, 8, 64):
+    for b in (1, 8) if SMOKE else (1, 8, 64):
         spikes = jnp.asarray(rng.random((b, n)) < 0.5, jnp.float32)
         f = jax.jit(
             lambda sp: backend.deliver(sp, src_tag, src_dest, cam_tag, cam_syn, cluster, k)

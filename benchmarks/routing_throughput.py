@@ -1,8 +1,23 @@
 """Table II: throughput/latency — simulated event-engine throughput on CPU
-plus the fabric model's analytical broadcast/R3 figures."""
+plus the fabric model's analytical broadcast/R3 figures.
+
+Rows (DESIGN.md §10):
+  * ``batched_dispatch_B*``      — engine step with the AER event queue (the
+                                   production delivery path), B event streams
+  * ``batched_dispatch_dense_*`` — same step on the dense no-queue path
+  * ``*_scan_step``              — per-step time inside one whole-scan jit of
+                                   ``EventEngine.run`` (separates delivery
+                                   cost from Python dispatch overhead)
+  * ``sparse_*``                 — deliver-only events/s at 1% / 10% / 100%
+                                   activity, event-queued vs dense: the
+                                   event-sparsity headline
+
+``BENCH_SMOKE=1`` shrinks geometry and iteration counts for CI smoke runs.
+"""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -13,10 +28,14 @@ from repro.core.event_engine import EventEngine
 from repro.core.routing import Fabric
 from repro.core.tags import NetworkSpec, compile_network
 
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
 
-def _engine(n=1024, cluster=256, k=1024, fan=16):
+
+def _tables(n=1024, cluster=256, k=1024, fan=16):
     """Clustered connectivity (the paper's regime): each source projects its
     fan-out into one cluster under a single tag — K stays bounded."""
+    if SMOKE:
+        n, cluster, k, fan = 256, 64, 256, 8
     rng = np.random.default_rng(0)
     spec = NetworkSpec(n_neurons=n, cluster_size=cluster, k_tags=k,
                        max_cam_words=64, max_sram_entries=16)
@@ -25,7 +44,17 @@ def _engine(n=1024, cluster=256, k=1024, fan=16):
         cl = int(rng.integers(n_clusters))
         dsts = cl * cluster + rng.choice(cluster, size=fan, replace=False)
         spec.connect_one_to_many(s, [int(d) for d in dsts], int(rng.integers(4)))
-    return EventEngine(compile_network(spec))
+    return compile_network(spec)
+
+
+def _time_loop(f, *args, iters):
+    r = f(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e6, r  # us
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -39,19 +68,24 @@ def run() -> list[tuple[str, float, str]]:
     out.append(("table2_fan_in_at_20hz", 0.0, f"{fab.max_fan_in(20.0):.0f}"))
     out.append(("table2_fan_in_at_100hz", 0.0, f"{fab.max_fan_in(100.0):.0f}"))
 
+    tables = _tables()
+    # the AER queue is the production delivery path; capacity models the
+    # per-core FIFO depth (1/8 of the population — lossless on this workload)
+    # no donate_carry: the timing loops below re-feed the same carry, which a
+    # donated step would invalidate on accelerators
+    q_cap = max(32, tables.n_neurons // 8)
+    eng = EventEngine(tables, queue_capacity=q_cap)
+    eng_dense = EventEngine(tables)
+    n_iter = 5 if SMOKE else 50
+    n_iter_b = 3 if SMOKE else 20
+    batch_sizes = (1, 8) if SMOKE else (1, 8, 64)
+    b_top = batch_sizes[-1]
+
     # simulated engine throughput (the chip's 1k-neuron configuration)
-    eng = _engine()
-    carry = eng.init_state()
+    carry = eng_dense.init_state()
     inp = jnp.zeros((eng.n_clusters, eng.k_tags)).at[:, :8].set(2.0)
-    step = jax.jit(lambda cr: eng.step(cr, inp))
-    carry, _ = step(carry)  # compile
-    jax.block_until_ready(carry[0].v)
-    n_iter = 50
-    t0 = time.perf_counter()
-    for _ in range(n_iter):
-        carry, spikes = step(carry)
-    jax.block_until_ready(spikes)
-    dt_us = (time.perf_counter() - t0) / n_iter * 1e6
+    step = jax.jit(lambda cr: eng_dense.step(cr, inp))
+    dt_us, _ = _time_loop(step, carry, iters=n_iter)
     # every step delivers all active source events through both stages
     events = int((eng.tables.src_tag >= 0).sum())
     out.append(
@@ -59,27 +93,85 @@ def run() -> list[tuple[str, float, str]]:
     )
 
     # batched dispatch: B concurrent event streams through ONE delivery
-    # (many users / DVS sensors on shared routing tables). Throughput is
-    # simulated events/s across the whole batch; the gain over B=1 is the
-    # batched-speedup headline.
+    # (many users / DVS sensors on shared routing tables), event-queued.
+    # Throughput is simulated events/s across the whole batch; the gain over
+    # B=1 is the batched-speedup headline.
     base_ev_s = None
-    for b in (1, 8, 64):
+    for b in batch_sizes:
         carry_b = eng.init_state(batch=b)
         inp_b = jnp.broadcast_to(inp, (b, *inp.shape))
         step_b = jax.jit(lambda cr: eng.step(cr, inp_b))
-        carry_b, _ = step_b(carry_b)  # compile
-        jax.block_until_ready(carry_b[0].v)
-        n_iter_b = 20
-        t0 = time.perf_counter()
-        for _ in range(n_iter_b):
-            carry_b, spikes_b = step_b(carry_b)
-        jax.block_until_ready(spikes_b)
-        dt_b_us = (time.perf_counter() - t0) / n_iter_b * 1e6
+        dt_b_us, _ = _time_loop(step_b, carry_b, iters=n_iter_b)
         ev_s = b * events / (dt_b_us / 1e6)
         if base_ev_s is None:
             base_ev_s = ev_s
         out.append(
             (f"batched_dispatch_B{b}", dt_b_us,
              f"{ev_s / 1e6:.2f}Mev_s_{ev_s / base_ev_s:.1f}x_vs_B1")
+        )
+
+    # dense no-queue comparison at the top batch size (the pre-§10 path)
+    carry_b = eng_dense.init_state(batch=b_top)
+    inp_b = jnp.broadcast_to(inp, (b_top, *inp.shape))
+    step_d = jax.jit(lambda cr: eng_dense.step(cr, inp_b))
+    dt_d_us, _ = _time_loop(step_d, carry_b, iters=n_iter_b)
+    out.append(
+        (f"batched_dispatch_dense_B{b_top}", dt_d_us,
+         f"{b_top * events / (dt_d_us / 1e6) / 1e6:.2f}Mev_s")
+    )
+
+    # whole-scan throughput: run() jits the T-step scan once, so per-step
+    # Python dispatch overhead is excluded — delivery cost only.
+    t_scan = 5 if SMOKE else 20
+    inp_t = jnp.broadcast_to(inp, (t_scan, b_top, *inp.shape))
+    run_fn = jax.jit(lambda cr, it: eng.run(cr, it))
+    dt_scan_us, _ = _time_loop(run_fn, eng.init_state(batch=b_top), inp_t,
+                               iters=max(2, n_iter_b // 2))
+    per_step_us = dt_scan_us / t_scan
+    out.append(
+        (f"batched_dispatch_B{b_top}_scan_step", per_step_us,
+         f"{b_top * events / (per_step_us / 1e6) / 1e6:.2f}Mev_s_scanned")
+    )
+
+    # sparsity sweep: deliver-only events/s at 1% / 10% / 100% activity —
+    # the event-sparse path scales with actual event traffic (DVS streams
+    # are ~1-5% active), the dense path pays N x E regardless.
+    from repro.core.dispatch import get_backend
+
+    backend = get_backend("reference")
+    entries_per_src = np.asarray((tables.src_tag >= 0).sum(1))
+    rng = np.random.default_rng(7)
+    n = tables.n_neurons
+    for pct, act in ((1, 0.01), (10, 0.10), (100, 1.0)):
+        spikes_np = rng.random((b_top, n)) < act
+        spikes = jnp.asarray(spikes_np, jnp.float32)
+        ev = int(entries_per_src[np.nonzero(spikes_np)[1]].sum())  # routed events
+        cap = min(n, max(32, int(act * n * 2)))  # 2x headroom: lossless
+
+        def dense_deliver(sp):
+            return backend.deliver(
+                sp, eng.tables.src_tag, eng.tables.src_dest, eng.tables.cam_tag,
+                eng.tables.cam_syn, eng.cluster_size, eng.k_tags,
+                syn_onehot=eng.tables.cam_syn_onehot,
+            )
+
+        def queued_deliver(sp):
+            return backend.deliver(
+                sp, eng.tables.src_tag, eng.tables.src_dest, eng.tables.cam_tag,
+                eng.tables.cam_syn, eng.cluster_size, eng.k_tags,
+                queue_capacity=cap, syn_onehot=eng.tables.cam_syn_onehot,
+            )
+
+        dt_dense_us, _ = _time_loop(jax.jit(dense_deliver), spikes, iters=n_iter_b)
+        dt_queue_us, _ = _time_loop(jax.jit(queued_deliver), spikes, iters=n_iter_b)
+        ev_s_dense = ev / (dt_dense_us / 1e6)
+        ev_s_queue = ev / (dt_queue_us / 1e6)
+        out.append(
+            (f"sparse_{pct}pct_dense_B{b_top}", dt_dense_us,
+             f"{ev_s_dense / 1e6:.2f}Mev_s")
+        )
+        out.append(
+            (f"sparse_{pct}pct_queue_B{b_top}", dt_queue_us,
+             f"{ev_s_queue / 1e6:.2f}Mev_s_{ev_s_queue / ev_s_dense:.1f}x_vs_dense")
         )
     return out

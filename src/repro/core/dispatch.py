@@ -1,47 +1,76 @@
-"""Pluggable dispatch backends for batched event delivery (DESIGN.md §9).
+"""Pluggable dispatch backends for batched event delivery (DESIGN.md §9/§10).
 
 A dispatch backend turns (spikes, routing tables, external tag activity)
 into per-neuron synaptic drive — the full stage-1 + stage-2 path of the
 paper — for a whole batch of concurrent event streams at once. All backends
 consume ``spikes [..., N]`` / ``external_activity [..., n_clusters, K]`` and
-return ``drive [..., N, N_SYN_TYPES]``; they differ only in *where* the
-stage-2 CAM match runs:
+return ``drive [..., N, N_SYN_TYPES]``; they differ in *where* the stage-2
+CAM match runs and whether the two stages are fused:
 
-  * ``reference`` — pure-jnp gather/einsum (oracle, CPU default)
+  * ``reference`` — pure-jnp scatter + indexed gather (oracle, CPU default)
   * ``pallas``    — the kernels/cam_match TPU kernel, grid (B, cluster,
                     neuron-tile): the activity row stays VMEM-pinned per
                     cluster while neurons and batch tile the MXU
+  * ``fused``     — the kernels/fused_deliver TPU kernel: stage-1 scatter
+                    AND stage-2 CAM match in one kernel, the activity row
+                    built and consumed in VMEM without an HBM round-trip;
+                    always event-queued (DESIGN.md §10)
   * ``sharded``   — shard_map over a 2-D mesh (batch over ``data``,
                     clusters over ``model``): stage-1 partials are
                     reduce-scattered to the owning cluster slab (the
                     R2/R3 point-to-point hop), stage-2 is fully local
 
-Backends are selected by name through :func:`get_backend` — this registry
-replaces the old ``use_kernel`` bool and the ad-hoc kernel import that used
-to live inside ``two_stage_deliver``. Third-party backends can register via
-:func:`register_backend`.
+Every backend supports **event-sparse delivery**: pass ``queue_capacity`` to
+compact active spikes into a fixed-capacity AER queue (core/two_stage.py)
+and scatter only queued events' SRAM entries in stage 1. ``with_stats=True``
+additionally returns a :class:`DeliveryStats` with the queue's drop counter
+(the chip's congestion behavior).
+
+Backends are selected by name through :func:`get_backend`; third-party
+backends can register via :func:`register_backend`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.two_stage import N_SYN_TYPES, stage1_route, stage2_cam_match
+from repro.core.two_stage import (
+    N_SYN_TYPES,
+    compact_events,
+    stage1_route,
+    stage1_route_events,
+    stage2_cam_match,
+)
 
 __all__ = [
     "DispatchBackend",
+    "DeliveryStats",
     "ReferenceBackend",
     "PallasBackend",
+    "FusedBackend",
     "ShardedBackend",
     "register_backend",
     "get_backend",
     "available_backends",
+    "backend_deliver",
 ]
 
 _REGISTRY: dict[str, type] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeliveryStats:
+    """Per-stream delivery statistics: ``dropped [...]`` int32 counts events
+    lost to AER-queue overflow this step (0 everywhere on the dense path)."""
+
+    dropped: jax.Array
+
+
+jax.tree_util.register_dataclass(DeliveryStats, data_fields=["dropped"], meta_fields=[])
 
 
 def register_backend(name: str):
@@ -80,6 +109,78 @@ def get_backend(spec: str | DispatchBackend | None = "reference", **options) -> 
     return cls(**options)
 
 
+def _kwargs_accepted_by(fn) -> set[str] | None:
+    """Names ``fn`` accepts as keywords; ``None`` means it takes ``**kwargs``."""
+    sig = inspect.signature(fn)
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in sig.parameters.values()):
+        return None
+    return set(sig.parameters)
+
+
+def backend_deliver(
+    backend: DispatchBackend,
+    spikes: jax.Array,
+    src_tag: jax.Array,
+    src_dest: jax.Array,
+    cam_tag: jax.Array,
+    cam_syn: jax.Array,
+    cluster_size: int,
+    k_tags: int,
+    external_activity: jax.Array | None = None,
+    queue_capacity: int | None = None,
+    syn_onehot: jax.Array | None = None,
+    with_stats: bool = False,
+):
+    """Signature-tolerant ``deliver`` call (the engine/two_stage entry point).
+
+    Third-party backends registered against the pre-§10 interface (no
+    ``queue_capacity`` / ``syn_onehot`` / ``with_stats`` keywords) keep
+    working: the new kwargs are forwarded only when the backend accepts
+    them. ``syn_onehot`` is a pure optimization hint and is dropped
+    silently; ``with_stats`` is synthesized (zero drops — a legacy backend
+    is always dense); asking a legacy backend for ``queue_capacity`` is a
+    semantic request it cannot honor and raises.
+    """
+    accepted = _kwargs_accepted_by(backend.deliver)
+    kwargs = {"external_activity": external_activity}
+    for name, value in (
+        ("queue_capacity", queue_capacity),
+        ("syn_onehot", syn_onehot),
+        ("with_stats", with_stats),
+    ):
+        if accepted is None or name in accepted:
+            kwargs[name] = value
+        elif name == "queue_capacity" and queue_capacity is not None:
+            raise ValueError(
+                f"dispatch backend {backend.name!r} predates event-sparse "
+                "delivery and does not support queue_capacity"
+            )
+    out = backend.deliver(
+        spikes, src_tag, src_dest, cam_tag, cam_syn, cluster_size, k_tags, **kwargs
+    )
+    if with_stats and "with_stats" not in kwargs:
+        return out, DeliveryStats(dropped=jnp.zeros(spikes.shape[:-1], jnp.int32))
+    return out
+
+
+def _stage1_activity(
+    spikes: jax.Array,
+    src_tag: jax.Array,
+    src_dest: jax.Array,
+    n_clusters: int,
+    k_tags: int,
+    queue_capacity: int | None,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage-1 scatter, dense or event-queued: ``(activity, dropped)``."""
+    if queue_capacity is None:
+        a = stage1_route(spikes, src_tag, src_dest, n_clusters, k_tags)
+        dropped = jnp.zeros(spikes.shape[:-1], jnp.int32)
+        return a, dropped
+    queue = compact_events(spikes, queue_capacity)
+    a = stage1_route_events(queue, src_tag, src_dest, n_clusters, k_tags)
+    return a, queue.dropped
+
+
 class DispatchBackend:
     """Interface: batched stage-1 scatter shared, stage-2 pluggable."""
 
@@ -92,6 +193,7 @@ class DispatchBackend:
         cam_tag: jax.Array,  # [N, S]
         cam_syn: jax.Array,  # [N, S]
         cluster_size: int,
+        syn_onehot: jax.Array | None = None,  # [N, S, 4] per-table constant
     ) -> jax.Array:  # [..., N, N_SYN_TYPES]
         raise NotImplementedError
 
@@ -106,21 +208,36 @@ class DispatchBackend:
         cluster_size: int,
         k_tags: int,
         external_activity: jax.Array | None = None,
-    ) -> jax.Array:
+        queue_capacity: int | None = None,
+        syn_onehot: jax.Array | None = None,
+        with_stats: bool = False,
+    ):
         n = spikes.shape[-1]
-        a = stage1_route(spikes, src_tag, src_dest, n // cluster_size, k_tags)
+        a, dropped = _stage1_activity(
+            spikes, src_tag, src_dest, n // cluster_size, k_tags, queue_capacity
+        )
         if external_activity is not None:
             a = a + external_activity
-        return self.cam_match(a, cam_tag, cam_syn, cluster_size)
+        # forward the one-hot hint only to stage-2 hooks that know it (a
+        # subclass written against the pre-§10 cam_match signature still works)
+        accepted = _kwargs_accepted_by(self.cam_match)
+        cam_kwargs = (
+            {"syn_onehot": syn_onehot} if accepted is None or "syn_onehot" in accepted
+            else {}
+        )
+        drive = self.cam_match(a, cam_tag, cam_syn, cluster_size, **cam_kwargs)
+        if with_stats:
+            return drive, DeliveryStats(dropped=dropped)
+        return drive
 
 
 @register_backend("reference")
 @dataclasses.dataclass(frozen=True)
 class ReferenceBackend(DispatchBackend):
-    """Pure-jnp stage 2 (gather + one-hot einsum)."""
+    """Pure-jnp stage 2 (direct indexed gather + synapse-type einsum)."""
 
-    def cam_match(self, activity, cam_tag, cam_syn, cluster_size):
-        return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size)
+    def cam_match(self, activity, cam_tag, cam_syn, cluster_size, syn_onehot=None):
+        return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size, syn_onehot)
 
 
 @register_backend("pallas")
@@ -139,7 +256,9 @@ class PallasBackend(DispatchBackend):
     block_c: int = 16
     interpret: bool | None = None
 
-    def cam_match(self, activity, cam_tag, cam_syn, cluster_size):
+    def cam_match(self, activity, cam_tag, cam_syn, cluster_size, syn_onehot=None):
+        # the kernel builds its compare planes in-register; the precomputed
+        # one-hot is a jnp-path optimization and is ignored here.
         if self.interpret is None:
             from repro.kernels.cam_match import ops as cam_ops
 
@@ -154,6 +273,64 @@ class PallasBackend(DispatchBackend):
         )
 
 
+@register_backend("fused")
+@dataclasses.dataclass(frozen=True)
+class FusedBackend(DispatchBackend):
+    """Single-kernel delivery: stage-1 scatter + stage-2 CAM match fused.
+
+    The kernels/fused_deliver kernel builds each (batch, cluster) activity
+    row in VMEM from the queued events and immediately CAM-matches it — the
+    ``[B, n_clusters, K]`` activity matrix never round-trips HBM. Always
+    event-queued: ``queue_capacity=None`` sizes the queue to N (lossless).
+
+    ``interpret=None`` follows the platform policy of fused_deliver/ops
+    (compiled kernel on TPU, jnp event-sparse reference elsewhere);
+    ``interpret=True`` forces the kernel in interpret mode (CPU validation).
+    """
+
+    block_c: int = 16
+    interpret: bool | None = None
+
+    def cam_match(self, activity, cam_tag, cam_syn, cluster_size, syn_onehot=None):
+        # stage 2 alone (no queue to fuse with): reference semantics.
+        return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size, syn_onehot)
+
+    def deliver(
+        self,
+        spikes,
+        src_tag,
+        src_dest,
+        cam_tag,
+        cam_syn,
+        cluster_size,
+        k_tags,
+        external_activity=None,
+        queue_capacity=None,
+        syn_onehot=None,
+        with_stats=False,
+    ):
+        from repro.kernels.fused_deliver import ops as fused_ops
+
+        capacity = spikes.shape[-1] if queue_capacity is None else queue_capacity
+        queue = compact_events(spikes, capacity)
+        drive = fused_ops.fused_deliver(
+            queue,
+            src_tag,
+            src_dest,
+            cam_tag,
+            cam_syn,
+            cluster_size,
+            k_tags,
+            external_activity=external_activity,
+            syn_onehot=syn_onehot,
+            block_c=self.block_c,
+            interpret=self.interpret,
+        )
+        if with_stats:
+            return drive, DeliveryStats(dropped=queue.dropped)
+        return drive
+
+
 def sharded_local_deliver(
     spikes: jax.Array,  # [..., N_local] this device's neuron slab
     src_tag: jax.Array,
@@ -165,21 +342,34 @@ def sharded_local_deliver(
     k_tags: int,
     cluster_axis: str,
     external_activity: jax.Array | None = None,  # [..., n_clusters/n_dev, K]
-) -> jax.Array:
+    queue_capacity: int | None = None,
+    syn_onehot: jax.Array | None = None,
+    with_stats: bool = False,
+):
     """Per-device delivery body shared by ShardedBackend and
     ``EventEngine.make_sharded_step`` (runs INSIDE shard_map).
 
     Stage 1 scatters this device's sources into a partial activity matrix
     covering ALL clusters; the reduce-scatter over ``cluster_axis`` hands
     each owner its slab (the R2/R3 point-to-point hop); stage 2 is local.
+
+    With ``queue_capacity`` each device compacts its own slab's spikes — the
+    hardware picture of one output FIFO per core. ``with_stats=True`` returns
+    ``(drive, dropped)`` where ``dropped`` is already summed over the cluster
+    axis (total events lost fabric-wide, replicated per device).
     """
-    a_partial = stage1_route(spikes, src_tag, src_dest, n_clusters, k_tags)
+    a_partial, dropped = _stage1_activity(
+        spikes, src_tag, src_dest, n_clusters, k_tags, queue_capacity
+    )
     a_local = jax.lax.psum_scatter(
         a_partial, cluster_axis, scatter_dimension=a_partial.ndim - 2, tiled=True
     )
     if external_activity is not None:
         a_local = a_local + external_activity
-    return stage2_cam_match(a_local, cam_tag, cam_syn, cluster_size)
+    drive = stage2_cam_match(a_local, cam_tag, cam_syn, cluster_size, syn_onehot)
+    if with_stats:
+        return drive, jax.lax.psum(dropped, cluster_axis)
+    return drive
 
 
 @register_backend("sharded")
@@ -204,10 +394,10 @@ class ShardedBackend(DispatchBackend):
         self.batch_axis = batch_axis
         self.cluster_axis = cluster_axis
 
-    def cam_match(self, activity, cam_tag, cam_syn, cluster_size):
+    def cam_match(self, activity, cam_tag, cam_syn, cluster_size, syn_onehot=None):
         # stage 2 alone is embarrassingly parallel; the interesting
         # communication lives in deliver(). Reference semantics here.
-        return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size)
+        return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size, syn_onehot)
 
     def deliver(
         self,
@@ -219,6 +409,9 @@ class ShardedBackend(DispatchBackend):
         cluster_size,
         k_tags,
         external_activity=None,
+        queue_capacity=None,
+        syn_onehot=None,
+        with_stats=False,
     ):
         from jax.sharding import PartitionSpec as P
 
@@ -242,19 +435,34 @@ class ShardedBackend(DispatchBackend):
             ).reshape(b, n_clusters, k_tags)
 
         ba, ca = self.batch_axis, self.cluster_axis
+        # per-device FIFO: each cluster shard compacts its slab of sources
+        local_capacity = queue_capacity
+        if local_capacity is not None:
+            local_capacity = max(1, -(-local_capacity // n_cl_dev))
 
-        def local(spk, s_tag, s_dest, c_tag, c_syn, ext):
+        def local(spk, s_tag, s_dest, c_tag, c_syn, s_1h, ext):
             return sharded_local_deliver(
                 spk, s_tag, s_dest, c_tag, c_syn, cluster_size, n_clusters,
                 k_tags, ca, external_activity=ext,
+                queue_capacity=local_capacity, syn_onehot=s_1h, with_stats=True,
             )
+
+        if syn_onehot is None:
+            from repro.core.two_stage import precompute_syn_onehot
+
+            syn_onehot = precompute_syn_onehot(cam_syn, dtype=spikes.dtype)
 
         f = shard_map(
             local,
             mesh=self.mesh,
-            in_specs=(P(ba, ca), P(ca), P(ca), P(ca), P(ca), P(ba, ca)),
-            out_specs=P(ba, ca),
+            in_specs=(P(ba, ca), P(ca), P(ca), P(ca), P(ca), P(ca), P(ba, ca)),
+            out_specs=(P(ba, ca), P(ba)),
             **SM_CHECK_KW,
         )
-        drive = f(spikes, src_tag, src_dest, cam_tag, cam_syn, external_activity)
-        return drive.reshape(*batch_shape, n, N_SYN_TYPES)
+        drive, dropped = f(
+            spikes, src_tag, src_dest, cam_tag, cam_syn, syn_onehot, external_activity
+        )
+        drive = drive.reshape(*batch_shape, n, N_SYN_TYPES)
+        if with_stats:
+            return drive, DeliveryStats(dropped=dropped.reshape(batch_shape))
+        return drive

@@ -2,8 +2,8 @@
 
 The engine is the executable model of the whole DYNAPs fabric:
 
-  spikes[t] --stage1--> tag activity A[c, k] --stage2/CAM--> drive[N, 4]
-           --AdExp/DPI--> spikes[t+1]
+  spikes[t] --AER queue--> stage1 --> tag activity A[c, k] --stage2/CAM-->
+           drive[N, 4] --AdExp/DPI--> spikes[t+1]
 
 External stimulation (the chip's Input Interface) enters as tag activity
 (events addressed to (cluster, tag)), exactly like the FPGA path in Fig. 7.
@@ -14,8 +14,18 @@ sensors) stepped against one set of routing tables in a single dispatch.
 ``EventEngine.run`` scans over a ``[T, n_clusters, K]`` (or batched
 ``[T, B, n_clusters, K]``) input-event tensor. Delivery is delegated to a
 pluggable dispatch backend (core/dispatch.py): ``reference`` (pure jnp),
-``pallas`` (TPU kernel), or ``sharded`` (2-D-mesh shard_map), selected by
-name — this replaces the old ``use_kernel`` bool.
+``pallas`` (TPU stage-2 kernel), ``fused`` (single-kernel stage-1+2), or
+``sharded`` (2-D-mesh shard_map), selected by name.
+
+**Event-sparse delivery** (DESIGN.md §10): construct the engine with
+``queue_capacity=Q`` to compact each step's spikes into a fixed-capacity AER
+queue before stage 1 — delivery cost then scales with event count, and
+``step``/``run`` additionally emit a :class:`DeliveryStats` (per-stream
+FIFO-overflow drop counts, stacked over time by the scan). With
+``donate_carry=True`` the step carry is donated to the compiled step on
+accelerators, so the neuron-state buffers are updated in place across a
+long run — but a carry you already stepped can then no longer be read
+(always thread the returned one).
 
 ``dense_reference_step`` is the oracle: the same network as one dense
 [N, N, 4] connectivity tensor (used by tests to prove routing equivalence),
@@ -26,26 +36,36 @@ across a mesh axis with ``shard_map``: stage-1 scatter produces a partial
 activity matrix per device which is reduce-scattered over the cluster axis
 — the TPU analogue of point-to-point R2/R3 traffic (DESIGN.md §2). With
 ``batch_axis`` set it runs on a 2-D mesh, sharding event streams over the
-data axis as well.
+data axis as well. With ``queue_capacity`` set, each device compacts its
+own neuron slab (one output FIFO per core, like the chip).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import neuron as neuron_mod
-from repro.core.dispatch import DispatchBackend, get_backend
+from repro.core.dispatch import (
+    DeliveryStats,
+    DispatchBackend,
+    backend_deliver,
+    get_backend,
+)
 from repro.core.neuron import NeuronParams, NeuronState
 from repro.core.shard_compat import SM_CHECK_KW, shard_map
 from repro.core.tags import RoutingTables
-from repro.core.two_stage import N_SYN_TYPES
+from repro.core.two_stage import N_SYN_TYPES, precompute_syn_onehot
 
-__all__ = ["EventEngine", "dense_weights_from_tables", "dense_reference_step"]
+__all__ = [
+    "EventEngine",
+    "DeliveryStats",
+    "dense_weights_from_tables",
+    "dense_reference_step",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,11 +74,23 @@ class _Tables:
     src_dest: jax.Array
     cam_tag: jax.Array
     cam_syn: jax.Array
+    # per-table constant [N, S, 4]: one-hot synapse types, precomputed once so
+    # the expansion never runs in the per-step hot path (DESIGN.md §10)
+    cam_syn_onehot: jax.Array
 
 
 jax.tree_util.register_dataclass(
-    _Tables, data_fields=["src_tag", "src_dest", "cam_tag", "cam_syn"], meta_fields=[]
+    _Tables,
+    data_fields=["src_tag", "src_dest", "cam_tag", "cam_syn", "cam_syn_onehot"],
+    meta_fields=[],
 )
+
+def _donate_carry_kwargs() -> dict:
+    """Carry donation lets XLA reuse the neuron-state buffers across steps;
+    the CPU backend does not implement donation and would warn on every
+    compile. Resolved at first :class:`EventEngine` construction — not at
+    import — so importing this module never initializes the JAX runtime."""
+    return {} if jax.default_backend() == "cpu" else {"donate_argnums": (0,)}
 
 
 class EventEngine:
@@ -70,6 +102,8 @@ class EventEngine:
         params: NeuronParams | None = None,
         backend: str | DispatchBackend = "reference",
         backend_options: dict | None = None,
+        queue_capacity: int | None = None,
+        donate_carry: bool = False,
     ):
         self.params = params or NeuronParams()
         self.cluster_size = tables.cluster_size
@@ -77,12 +111,24 @@ class EventEngine:
         self.n_neurons = tables.n_neurons
         self.n_clusters = tables.n_clusters
         self.backend = get_backend(backend, **(backend_options or {}))
+        if queue_capacity is not None and queue_capacity <= 0:
+            raise ValueError(f"queue_capacity must be positive, got {queue_capacity}")
+        self.queue_capacity = queue_capacity
+        cam_syn = jnp.asarray(tables.cam_syn)
         self.tables = _Tables(
             src_tag=jnp.asarray(tables.src_tag),
             src_dest=jnp.asarray(tables.src_dest),
             cam_tag=jnp.asarray(tables.cam_tag),
-            cam_syn=jnp.asarray(tables.cam_syn),
+            cam_syn=cam_syn,
+            cam_syn_onehot=precompute_syn_onehot(cam_syn),
         )
+        # per-engine compiled step (self is closed over = static). Carry
+        # donation is opt-in: with donate_carry=True on an accelerator the
+        # neuron-state buffers are updated in place across a long run, but a
+        # carry you already stepped can no longer be read (parity tests and
+        # debuggers do exactly that — hence the conservative default).
+        donate = _donate_carry_kwargs() if donate_carry else {}
+        self._jit_step = jax.jit(self._step_impl, **donate)
 
     # ------------------------------------------------------------------
     def init_state(
@@ -95,15 +141,25 @@ class EventEngine:
             jnp.zeros((*lead, self.n_neurons), jnp.float32),
         )
 
-    @partial(jax.jit, static_argnums=0)
     def step(
         self,
         carry: tuple[NeuronState, jax.Array],
         input_activity: jax.Array,  # [..., n_clusters, K] external events this step
         i_ext: jax.Array | None = None,
-    ) -> tuple[tuple[NeuronState, jax.Array], jax.Array]:
+    ):
+        """One fabric timestep (jit-compiled per engine; carry donated when
+        the engine was built with ``donate_carry=True``).
+
+        Returns ``(carry, spikes)`` — or ``(carry, (spikes, DeliveryStats))``
+        when the engine was built with ``queue_capacity`` (drop counts are
+        part of the observable output so ``run``'s scan stacks them over T).
+        """
+        return self._jit_step(carry, input_activity, i_ext)
+
+    def _step_impl(self, carry, input_activity, i_ext=None):
         state, prev_spikes = carry
-        drive = self.backend.deliver(
+        drive, stats = backend_deliver(
+            self.backend,
             prev_spikes,
             self.tables.src_tag,
             self.tables.src_dest,
@@ -112,17 +168,23 @@ class EventEngine:
             self.cluster_size,
             self.k_tags,
             external_activity=input_activity,
+            queue_capacity=self.queue_capacity,
+            syn_onehot=self.tables.cam_syn_onehot,
+            with_stats=True,
         )
         state, spikes = neuron_mod.neuron_step(state, drive, self.params, i_ext)
-        return (state, spikes), spikes
+        out = spikes if self.queue_capacity is None else (spikes, stats)
+        return (state, spikes), out
 
     def run(
         self,
         carry: tuple[NeuronState, jax.Array],
         input_events: jax.Array,  # [T, ..., n_clusters, K]
         i_ext: jax.Array | None = None,
-    ) -> tuple[tuple[NeuronState, jax.Array], jax.Array]:
-        """Scan T steps; returns (final carry, spikes [T, ..., N])."""
+    ):
+        """Scan T steps; returns ``(final carry, spikes [T, ..., N])`` — with
+        ``queue_capacity`` set, ``(final carry, (spikes [T, ..., N],
+        DeliveryStats with dropped [T, ...]))``."""
 
         def body(c, inp):
             return self.step(c, inp, i_ext)
@@ -145,6 +207,10 @@ class EventEngine:
         With ``batch_axis`` set the mesh is 2-D: event streams shard over
         ``batch_axis`` (pure data parallelism) while clusters shard over
         ``axis``; all carried arrays then bear a leading batch dim.
+
+        With the engine's ``queue_capacity`` set, each device compacts its
+        local slab through its own AER FIFO and the step returns
+        ``(state, spikes, dropped)`` — ``dropped`` already summed fabric-wide.
         """
         from jax.sharding import PartitionSpec as P
 
@@ -153,12 +219,15 @@ class EventEngine:
         params = self.params
         cluster_size, k_tags = self.cluster_size, self.k_tags
         n_clusters = self.n_clusters
+        queue_capacity = self.queue_capacity
+        if queue_capacity is not None:  # per-core FIFO: split capacity by slab
+            queue_capacity = max(1, -(-queue_capacity // n_dev))
 
         from repro.core.dispatch import sharded_local_deliver
 
         def local_step(tables, state, prev_spikes, input_activity, i_ext):
             # prev_spikes: local slab [..., N/n_dev]; tables rows local.
-            drive = sharded_local_deliver(
+            drive, dropped = sharded_local_deliver(
                 prev_spikes,
                 tables.src_tag,
                 tables.src_dest,
@@ -169,26 +238,37 @@ class EventEngine:
                 k_tags,
                 axis,
                 external_activity=input_activity,
+                queue_capacity=queue_capacity,
+                syn_onehot=tables.cam_syn_onehot,
+                with_stats=True,
             )
             state, spikes = neuron_mod.neuron_step(state, drive, params, i_ext)
-            return state, spikes
+            if queue_capacity is None:
+                return state, spikes
+            return state, spikes, dropped
 
         spec_t = P(axis)  # tables: shard rows (neurons) over the cluster axis
         if batch_axis is None:
             spec_c = P(axis)  # unbatched carry: leading dim is neurons
+            spec_d = P()  # drop counter: replicated (summed over ``axis``)
         else:
             spec_c = P(batch_axis, axis)  # batched carry: [B, N_local, ...]
+            spec_d = P(batch_axis)
+        state_spec = NeuronState(spec_c, spec_c, spec_c, spec_c)
+        out_specs = (state_spec, spec_c)
+        if queue_capacity is not None:
+            out_specs = (state_spec, spec_c, spec_d)
         return shard_map(
             local_step,
             mesh=mesh,
             in_specs=(
-                _Tables(spec_t, spec_t, spec_t, spec_t),
-                NeuronState(spec_c, spec_c, spec_c, spec_c),
+                _Tables(spec_t, spec_t, spec_t, spec_t, spec_t),
+                state_spec,
                 spec_c,
                 spec_c,
                 spec_c,
             ),
-            out_specs=(NeuronState(spec_c, spec_c, spec_c, spec_c), spec_c),
+            out_specs=out_specs,
             **SM_CHECK_KW,
         )
 

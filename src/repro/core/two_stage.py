@@ -11,30 +11,166 @@ scatter-add, and across devices a reduce-scatter over the cluster axis
 Stage 2 (broadcast + CAM match, "R1 -> core"): each cluster broadcasts its
 activity row to all member neurons; every CAM word that matches contributes
 its event weight to the synapse-type accumulator of its neuron. This is the
-compute hot-spot and has a Pallas kernel (kernels/cam_match); the functions
-here are the pure-jnp implementations used as reference and CPU fallback.
+compute hot-spot and has Pallas kernels (kernels/cam_match and the fused
+kernels/fused_deliver); the functions here are the pure-jnp implementations
+used as reference and CPU fallback.
 
 Both stages are **batch-native** (DESIGN.md §9): ``spikes`` may carry any
 leading batch shape ``[..., N]`` (many concurrent event streams / network
 instances over shared routing tables), producing ``A[..., n_clusters, K]``
-and drive ``[..., N, 4]``. The batch dimension is carried through a single
-scatter / gather, not an outer ``vmap``, so backends can tile it natively.
+and drive ``[..., N, 4]``.
 
-The same two functions implement MoE dispatch in models/moe.py:
+**Event-sparse delivery** (DESIGN.md §10): the fabric carries *events*, not
+dense activity — on the chip only neurons that spiked occupy the AER bus.
+:func:`compact_events` models the core's output FIFO: active sources are
+compacted (in arbiter scan order) into a fixed-capacity ``(src, weight)``
+queue with an overflow/drop counter matching the chip's congestion
+behavior. :func:`stage1_route_events` then scatters only the queued events'
+SRAM entries, so stage-1 cost scales with event count, not network size.
+
+The same functions implement MoE dispatch in models/moe.py:
 clusters = expert groups, tags = expert ids, CAM subscription = expert
-residency. See DESIGN.md §3.
+residency; :func:`dispatch_slots` is the shared sort-based slot assignment.
+See DESIGN.md §3.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["stage1_route", "stage2_cam_match", "two_stage_deliver", "N_SYN_TYPES"]
+__all__ = [
+    "stage1_route",
+    "stage2_cam_match",
+    "two_stage_deliver",
+    "compact_events",
+    "stage1_route_events",
+    "gather_event_entries",
+    "precompute_syn_onehot",
+    "dispatch_slots",
+    "EventQueue",
+    "N_SYN_TYPES",
+]
 
 N_SYN_TYPES = 4  # fast-exc, slow-exc, subtractive-inh, shunting-inh
+
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# AER event queue (the core's output FIFO)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EventQueue:
+    """Fixed-capacity compaction of one step's active sources.
+
+    ``src[..., Q]`` holds source neuron ids in arbiter scan order (lowest id
+    first — the chip's priority encoder), ``-1`` marks empty slots past the
+    last event. ``weight`` is the event weight (``spikes[src]``); ``dropped``
+    counts events that did not fit (the FIFO-overflow / congestion counter).
+    """
+
+    src: jax.Array  # [..., Q] int32, -1 = empty
+    weight: jax.Array  # [..., Q]
+    dropped: jax.Array  # [...] int32
+
+
+jax.tree_util.register_dataclass(
+    EventQueue, data_fields=["src", "weight", "dropped"], meta_fields=[]
+)
+
+
+def compact_events(spikes: jax.Array, capacity: int) -> EventQueue:
+    """Compact active spikes into a fixed-capacity AER queue (jit-able).
+
+    The hardware analogue is the core's arbitrated output FIFO: sources are
+    scanned in id order and the first ``capacity`` active ones win the bus;
+    the rest are dropped and counted. Queue slot ``s`` holds the (s+1)-th
+    active source — a binary search of ``s+1`` in the running active count,
+    so compaction is one cumsum + Q binary searches per stream (no sort, no
+    scatter; ~5-10x cheaper than a ``top_k`` formulation on CPU).
+    """
+    n = spikes.shape[-1]
+    q = min(int(capacity), n)
+    if q <= 0:
+        raise ValueError(f"queue capacity must be positive, got {capacity}")
+    batch_shape = spikes.shape[:-1]
+    active = spikes != 0
+    pos = jnp.cumsum(active, axis=-1, dtype=jnp.int32)  # running active count
+    targets = jnp.arange(1, q + 1, dtype=jnp.int32)
+    src = jax.vmap(lambda p: jnp.searchsorted(p, targets, side="left"))(
+        pos.reshape(-1, n)
+    ).reshape(*batch_shape, q)
+    kept = src < n  # slot beyond the last active source -> empty
+    src = jnp.where(kept, src, -1).astype(jnp.int32)
+    weight = jnp.where(
+        kept,
+        jnp.take_along_axis(spikes, jnp.clip(src, 0), axis=-1),
+        jnp.zeros((), spikes.dtype),
+    )
+    n_active = active.sum(axis=-1, dtype=jnp.int32)
+    dropped = n_active - kept.sum(axis=-1, dtype=jnp.int32)
+    return EventQueue(src=src, weight=weight, dropped=dropped)
+
+
+def gather_event_entries(
+    queue: EventQueue,
+    src_tag: jax.Array,  # [N, E] int32, -1 = empty
+    src_dest: jax.Array,  # [N, E] int32 cluster ids
+) -> tuple[jax.Array, jax.Array]:
+    """Fetch the queued events' SRAM rows: ``(ev_tag, ev_dest) [..., Q, E]``.
+
+    This is the per-event "SRAM memory-address loop": only queued sources'
+    entries are read. Empty queue slots yield ``ev_tag = -1`` rows.
+    """
+    safe = jnp.clip(queue.src, 0, src_tag.shape[0] - 1)
+    ev_tag = jnp.take(src_tag, safe, axis=0)  # [..., Q, E]
+    ev_dest = jnp.take(src_dest, safe, axis=0)
+    ev_tag = jnp.where(queue.src[..., None] >= 0, ev_tag, -1)
+    return ev_tag, ev_dest
+
+
+# ---------------------------------------------------------------------------
+# stage 1 — scatter-add into the tag-activity matrix
+# ---------------------------------------------------------------------------
+def _accumulate_activity(
+    flat: jax.Array,  # [B, M] int32 per-batch flat indices; invalid -> size
+    weights: jax.Array,  # [B, M]
+    size: int,
+    _force_path: str | None = None,  # tests only: "flat32" | "flat64" | "2d"
+) -> jax.Array:  # [B, size]
+    """Batched scatter-add into per-batch activity slabs, int32-overflow-safe.
+
+    The fast path linearizes (batch, slot) into one flat index so the whole
+    batch is a single 1-D scatter. When ``b * (size + 1)`` exceeds the int32
+    range that index would wrap, so offsets are computed in int64 when x64 is
+    enabled, and otherwise the scatter falls back to 2-D (batch, slot)
+    indices — each component stays comfortably within int32.
+    """
+    b, _ = flat.shape
+    span = size + 1  # slot ``size`` absorbs invalid entries
+    path = _force_path
+    if path is None:
+        if b * span - 1 <= _INT32_MAX:
+            path = "flat32"
+        elif jax.config.jax_enable_x64:
+            path = "flat64"
+        else:
+            path = "2d"
+    if path in ("flat32", "flat64"):
+        dt = jnp.int32 if path == "flat32" else jnp.int64
+        offsets = jnp.arange(b, dtype=dt)[:, None] * span
+        flat_b = flat.astype(dt) + offsets
+        a = jnp.zeros((b * span,), dtype=weights.dtype)
+        a = a.at[flat_b.reshape(-1)].add(weights.reshape(-1), mode="drop")
+        return a.reshape(b, span)[:, :size]
+    bidx = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None], flat.shape)
+    a = jnp.zeros((b, span), dtype=weights.dtype)
+    a = a.at[bidx.reshape(-1), flat.reshape(-1)].add(weights.reshape(-1), mode="drop")
+    return a[:, :size]
 
 
 def stage1_route(
@@ -46,9 +182,11 @@ def stage1_route(
 ) -> jax.Array:
     """Scatter stage-1 events into the tag-activity matrix ``A[..., n_clusters, K]``.
 
-    The routing tables are shared across the batch (one compiled network,
-    many event streams); each batch element scatters into its own slab of a
-    single flat accumulator, so the whole batch is one scatter-add.
+    Dense path: all ``N x E`` SRAM entries are scattered regardless of
+    activity (cost scales with network size). For event-sparse delivery use
+    :func:`compact_events` + :func:`stage1_route_events` instead. The routing
+    tables are shared across the batch; each batch element scatters into its
+    own slab of a single flat accumulator.
     """
     valid = src_tag >= 0
     size = n_clusters * k_tags
@@ -61,13 +199,50 @@ def stage1_route(
         a = a.at[flat.reshape(-1)].add(weights.reshape(-1), mode="drop")
         return a.reshape(n_clusters, k_tags)
     b = math.prod(batch_shape)
-    # per-batch slab of width size+1: slot ``size`` absorbs invalid entries.
-    offsets = jnp.arange(b, dtype=flat.dtype)[:, None] * (size + 1)
-    flat_b = flat.reshape(1, -1) + offsets  # [B, N*E]
-    a = jnp.zeros((b * (size + 1),), dtype=spikes.dtype)
-    a = a.at[flat_b.reshape(-1)].add(weights.reshape(b, -1).reshape(-1), mode="drop")
-    a = a.reshape(b, size + 1)[:, :size]
+    flat_b = jnp.broadcast_to(flat.reshape(1, -1), (b, flat.size))
+    a = _accumulate_activity(flat_b, weights.reshape(b, -1), size)
     return a.reshape(*batch_shape, n_clusters, k_tags)
+
+
+def stage1_route_events(
+    queue: EventQueue,  # src [..., Q], weight [..., Q]
+    src_tag: jax.Array,  # [N, E]
+    src_dest: jax.Array,  # [N, E]
+    n_clusters: int,
+    k_tags: int,
+) -> jax.Array:
+    """Event-sparse stage 1: scatter only the queued events' SRAM entries.
+
+    Cost is ``O(Q x E)`` per stream — event count, not network size. Produces
+    the same ``A[..., n_clusters, K]`` as :func:`stage1_route` whenever the
+    queue holds every active source (no overflow).
+    """
+    ev_tag, ev_dest = gather_event_entries(queue, src_tag, src_dest)
+    valid = ev_tag >= 0
+    size = n_clusters * k_tags
+    flat = jnp.where(valid, ev_dest * k_tags + ev_tag, size)  # [..., Q, E]
+    weights = queue.weight[..., None] * valid.astype(queue.weight.dtype)
+    batch_shape = queue.src.shape[:-1]
+    if not batch_shape:
+        a = jnp.zeros((size,), dtype=weights.dtype)
+        a = a.at[flat.reshape(-1)].add(weights.reshape(-1), mode="drop")
+        return a.reshape(n_clusters, k_tags)
+    b = math.prod(batch_shape)
+    a = _accumulate_activity(flat.reshape(b, -1), weights.reshape(b, -1), size)
+    return a.reshape(*batch_shape, n_clusters, k_tags)
+
+
+# ---------------------------------------------------------------------------
+# stage 2 — broadcast + CAM match
+# ---------------------------------------------------------------------------
+def precompute_syn_onehot(cam_syn: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """One-hot synapse-type plane ``[N, S, N_SYN_TYPES]`` for stage 2.
+
+    A per-table constant (the CAM's synapse-type wiring never changes at
+    run time) — precompute once and pass to :func:`stage2_cam_match` to keep
+    the one-hot expansion out of the per-step cost.
+    """
+    return jax.nn.one_hot(cam_syn, N_SYN_TYPES, dtype=dtype)
 
 
 def stage2_cam_match(
@@ -75,31 +250,32 @@ def stage2_cam_match(
     cam_tag: jax.Array,  # [N, S] int32, -1 = empty
     cam_syn: jax.Array,  # [N, S] int32 in [0, N_SYN_TYPES)
     cluster_size: int,
+    syn_onehot: jax.Array | None = None,  # [N, S, N_SYN_TYPES] precomputed
 ) -> jax.Array:
     """Broadcast + CAM match: returns synaptic drive ``I[..., N, N_SYN_TYPES]``.
 
-    Pure-jnp reference; the Pallas kernel in kernels/cam_match computes the
-    same quantity blocked over (batch, cluster, neuron-tile) with the
-    activity row pinned in VMEM.
+    Pure-jnp reference. CAM word ``(j, s)`` reads exactly one activity cell —
+    ``activity[cluster_of(j), cam_tag[j, s]]`` — so the gather is a direct
+    advanced-indexing ``take`` on the flattened activity; no intermediate
+    ``[..., n_clusters, cluster_size, K]`` broadcast is ever materialized
+    (that tensor is ~1 GB at B=64 on the benchmark geometry). The Pallas
+    kernels in kernels/cam_match and kernels/fused_deliver compute the same
+    quantity with the activity row pinned in VMEM.
     """
     n, s = cam_tag.shape
     n_clusters, k = activity.shape[-2:]
     batch_shape = activity.shape[:-2]
     assert n == n_clusters * cluster_size, (n, n_clusters, cluster_size)
-    # [n_clusters, C, S] view of the CAM; gather each cluster's activity row.
-    tags = cam_tag.reshape(n_clusters, cluster_size, s)
-    valid = tags >= 0
-    idx = jnp.clip(tags, 0, k - 1)
-    rows = jnp.broadcast_to(
-        activity[..., :, None, :], (*batch_shape, n_clusters, cluster_size, k)
-    )
-    vals = jnp.take_along_axis(
-        rows, jnp.broadcast_to(idx, (*batch_shape, n_clusters, cluster_size, s)), axis=-1
-    )
-    vals = jnp.where(valid, vals, jnp.zeros((), activity.dtype))  # [..., nc, C, S]
-    syn = cam_syn.reshape(n_clusters, cluster_size, s)
-    onehot = jax.nn.one_hot(syn, N_SYN_TYPES, dtype=vals.dtype)  # [nc, C, S, T]
-    out = jnp.einsum("...ncs,ncst->...nct", vals, onehot)
+    valid = cam_tag >= 0
+    # flat (cluster, tag) address of each CAM word; invalid words clamped.
+    cluster_of_word = jnp.arange(n, dtype=jnp.int32)[:, None] // cluster_size
+    flat_word = cluster_of_word * k + jnp.clip(cam_tag, 0, k - 1)  # [N, S]
+    act_flat = activity.reshape(*batch_shape, n_clusters * k)
+    vals = jnp.take(act_flat, flat_word, axis=-1, mode="clip")  # [..., N, S]
+    vals = jnp.where(valid, vals, jnp.zeros((), activity.dtype))
+    if syn_onehot is None:
+        syn_onehot = precompute_syn_onehot(cam_syn, dtype=vals.dtype)
+    out = jnp.einsum("...ns,nst->...nt", vals, syn_onehot.astype(vals.dtype))
     return out.reshape(*batch_shape, n, N_SYN_TYPES)
 
 
@@ -113,17 +289,23 @@ def two_stage_deliver(
     k_tags: int,
     external_activity: jax.Array | None = None,
     backend: str | object = "reference",
-) -> jax.Array:
+    queue_capacity: int | None = None,
+    syn_onehot: jax.Array | None = None,
+    with_stats: bool = False,
+):
     """Full event delivery: spikes -> synaptic drive per neuron & synapse type.
 
     ``external_activity`` injects input events (the chip's Input Interface /
     FPGA path) directly as tag activity. ``backend`` selects the dispatch
-    implementation by name or instance (core/dispatch.py registry); it
-    replaces the old ``use_kernel`` bool.
+    implementation by name or instance (core/dispatch.py registry).
+    ``queue_capacity`` enables event-sparse delivery through a fixed-capacity
+    AER queue (DESIGN.md §10); with ``with_stats=True`` the return value is
+    ``(drive, DeliveryStats)`` carrying the queue's drop counter.
     """
-    from repro.core.dispatch import get_backend
+    from repro.core.dispatch import backend_deliver, get_backend
 
-    return get_backend(backend).deliver(
+    return backend_deliver(
+        get_backend(backend),
         spikes,
         src_tag,
         src_dest,
@@ -132,4 +314,33 @@ def two_stage_deliver(
         cluster_size,
         k_tags,
         external_activity=external_activity,
+        queue_capacity=queue_capacity,
+        syn_onehot=syn_onehot,
+        with_stats=with_stats,
     )
+
+
+# ---------------------------------------------------------------------------
+# shared sort-based slot assignment (AER queue / MoE expert buffers)
+# ---------------------------------------------------------------------------
+def dispatch_slots(flat_e: jax.Array, n_bins: int, cap: int):
+    """Assign each event a slot in its bin's fixed-capacity buffer.
+
+    ``flat_e [A]`` is a bin id per event (out-of-range = inactive); returns
+    ``(slot [A], keep [A])`` where ``slot = bin * cap + position`` for the
+    first ``cap`` events of each bin (stable order) and ``keep`` masks the
+    rest — the same FIFO-overflow semantics as :func:`compact_events`, for
+    many bins at once. Used by the MoE expert-dispatch path (models/moe.py),
+    where bins are experts/shards and ``cap`` is the expert capacity.
+    """
+    a = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((n_bins,), jnp.int32).at[sorted_e].add(1, mode="drop")
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(a, dtype=jnp.int32) - starts[sorted_e]
+    keep = (pos_in_e < cap) & (sorted_e >= 0) & (sorted_e < n_bins)
+    slot_sorted = jnp.where(keep, sorted_e * cap + pos_in_e, -1)
+    # undo the sort: slot for the original assignment order
+    slot = jnp.zeros((a,), jnp.int32).at[order].set(slot_sorted)
+    return slot, slot >= 0

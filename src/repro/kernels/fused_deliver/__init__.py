@@ -1,0 +1,10 @@
+"""Fused stage-1 + stage-2 event delivery (kernel + ops + reference).
+
+See fused_deliver.py for the kernel design and DESIGN.md §10 for the memory
+layout. Most callers should go through the ``fused`` dispatch backend
+(repro.core.dispatch) instead of importing from here directly.
+"""
+
+from repro.kernels.fused_deliver.fused_deliver import fused_deliver_pallas  # noqa: F401
+from repro.kernels.fused_deliver.ops import fused_deliver  # noqa: F401
+from repro.kernels.fused_deliver.ref import fused_deliver_ref  # noqa: F401

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for fused event-sparse delivery (no Pallas).
+
+Semantics: exactly stage-1-from-queue followed by stage-2 CAM match —
+
+    A[c, k]     = sum_{queued events (src, w)} sum_e w * [src_dest[src,e]==c]
+                                                       * [src_tag[src,e]==k]
+    drive[n, t] = sum_s A[cluster_of(n), cam_tag[n, s]] * [cam_syn[n, s]==t]
+
+The implementation IS ``core.two_stage.stage1_route_events`` +
+``stage2_cam_match`` — one algorithm, composed here so kernel tests name
+their oracle without caring where the production jnp path lives (and so the
+two can never drift apart). This is also the CPU compute path of the
+``fused`` dispatch backend (the Pallas kernel targets TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.two_stage import (  # noqa: F401
+    EventQueue,
+    N_SYN_TYPES,
+    stage1_route_events,
+    stage2_cam_match,
+)
+
+
+def fused_deliver_ref(
+    queue: EventQueue,  # src/weight [..., Q]
+    src_tag: jax.Array,  # [N, E] int32, -1 empty
+    src_dest: jax.Array,  # [N, E] int32
+    cam_tag: jax.Array,  # [N, S] int32, -1 empty
+    cam_syn: jax.Array,  # [N, S] int32 in [0, 4)
+    cluster_size: int,
+    k_tags: int,
+    external_activity: jax.Array | None = None,  # [..., n_clusters, K]
+    syn_onehot: jax.Array | None = None,  # [N, S, 4] per-table constant
+) -> jax.Array:  # [..., N, 4]
+    n = src_tag.shape[0]
+    a = stage1_route_events(queue, src_tag, src_dest, n // cluster_size, k_tags)
+    if external_activity is not None:
+        a = a + external_activity
+    return stage2_cam_match(a, cam_tag, cam_syn, cluster_size, syn_onehot)

@@ -34,6 +34,11 @@ import jax.numpy as jnp
 from repro.core.shard_compat import SM_CHECK_KW as _SM_CHECK_KW
 from repro.core.shard_compat import axis_size as _axis_size
 
+# fixed-capacity slot assignment shared with the AER event path: the expert
+# buffer IS the event queue of DESIGN.md §10 (bins = experts/shards,
+# cap = expert capacity, overflow = token drop).
+from repro.core.two_stage import dispatch_slots as _dispatch_indices
+
 # ---------------------------------------------------------------------------
 # params
 # ---------------------------------------------------------------------------
@@ -108,23 +113,9 @@ def _experts_ffn(params: dict, buf: jax.Array, e_slice=None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# sort-based two-stage dispatch (single device / per-shard stage 2)
+# sort-based two-stage dispatch (single device / per-shard stage 2);
+# slot assignment lives in core.two_stage.dispatch_slots (shared with AER)
 # ---------------------------------------------------------------------------
-def _dispatch_indices(flat_e: jax.Array, n_experts: int, cap: int):
-    """flat expert assignment [A] -> (buffer slot [A] or -1, keep mask [A])."""
-    a = flat_e.shape[0]
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_e = flat_e[order]
-    counts = jnp.zeros((n_experts,), jnp.int32).at[sorted_e].add(1, mode="drop")
-    starts = jnp.cumsum(counts) - counts
-    pos_in_e = jnp.arange(a, dtype=jnp.int32) - starts[sorted_e]
-    keep = (pos_in_e < cap) & (sorted_e >= 0) & (sorted_e < n_experts)
-    slot_sorted = jnp.where(keep, sorted_e * cap + pos_in_e, -1)
-    # undo the sort: slot for the original assignment order
-    slot = jnp.zeros((a,), jnp.int32).at[order].set(slot_sorted)
-    return slot, slot >= 0
-
-
 def moe_local(params: dict, x: jax.Array, cfg, capacity: int | None = None):
     """Two-stage dispatch on one device. x: [T, D] -> ([T, D], aux)."""
     t, d = x.shape

@@ -1,10 +1,12 @@
 """Batched, backend-pluggable event dispatch (core/dispatch.py).
 
-Covers the acceptance criteria of the batched-dispatch refactor:
+Covers the acceptance criteria of the batched-dispatch refactor and the
+event-sparse delivery layer:
   * batched step/run == independent single runs (B=3 vs 3x B=1)
-  * every registered backend (reference / pallas / sharded) matches the
-    dense oracle for B in {1, 4}
-  * the batched Pallas kernel matches the batched jnp reference
+  * every registered backend (reference / pallas / sharded / fused) matches
+    the dense oracle for B in {1, 4} at activity levels {1%, 10%, 100%},
+    dense and event-queued (queue below capacity)
+  * the batched Pallas kernels match the batched jnp reference
   * registry ergonomics (unknown names, instance pass-through)
 """
 
@@ -15,6 +17,7 @@ import pytest
 
 from repro.core.dispatch import (
     DispatchBackend,
+    FusedBackend,
     PallasBackend,
     available_backends,
     get_backend,
@@ -26,10 +29,17 @@ from repro.kernels.cam_match.cam_match import cam_match_pallas
 from repro.kernels.cam_match.ref import cam_match_ref
 
 
+ALL_BACKENDS = ["reference", "pallas", "sharded", "fused"]
+
+
 def _bk(name):
-    """'pallas' with the platform default would fall back to the jnp
-    reference on CPU; force interpret mode so CI exercises the real kernel."""
-    return PallasBackend(interpret=True) if name == "pallas" else name
+    """'pallas'/'fused' with the platform default would fall back to the jnp
+    reference on CPU; force interpret mode so CI exercises the real kernels."""
+    if name == "pallas":
+        return PallasBackend(interpret=True)
+    if name == "fused":
+        return FusedBackend(interpret=True)
+    return name
 
 
 def _tables(seed, n=48, cluster=16, k=48, edges=60):
@@ -50,7 +60,7 @@ def _tables(seed, n=48, cluster=16, k=48, edges=60):
 # registry
 # ---------------------------------------------------------------------------
 def test_registry_lists_all_builtin_backends():
-    assert {"reference", "pallas", "sharded"} <= set(available_backends())
+    assert {"reference", "pallas", "sharded", "fused"} <= set(available_backends())
 
 
 def test_unknown_backend_raises_with_choices():
@@ -98,7 +108,7 @@ def test_batched_stage2_equals_stacked_single():
 # ---------------------------------------------------------------------------
 # backend parity vs the dense oracle, B in {1, 4}
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("backend", ["reference", "pallas", "sharded"])
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
 @pytest.mark.parametrize("b", [1, 4])
 def test_backend_matches_dense_oracle(backend, b):
     tables = _tables(7)
@@ -116,7 +126,30 @@ def test_backend_matches_dense_oracle(backend, b):
     np.testing.assert_allclose(np.asarray(drive), np.asarray(ref), rtol=1e-5, atol=1e-6)
 
 
-@pytest.mark.parametrize("backend", ["reference", "pallas", "sharded"])
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("b", [1, 4])
+@pytest.mark.parametrize("activity", [0.01, 0.1, 1.0])
+def test_backend_event_queued_matches_dense_oracle(backend, b, activity):
+    """Event-sparse delivery == dense oracle at every sparsity level, for
+    every backend, while the AER queue is below capacity (DESIGN.md §10)."""
+    tables = _tables(31)
+    dense = jnp.asarray(dense_weights_from_tables(tables))
+    rng = np.random.default_rng(int(activity * 100) + b)
+    spikes = jnp.asarray(rng.random((b, tables.n_neurons)) < activity, jnp.float32)
+    drive, stats = two_stage_deliver(
+        spikes,
+        jnp.asarray(tables.src_tag), jnp.asarray(tables.src_dest),
+        jnp.asarray(tables.cam_tag), jnp.asarray(tables.cam_syn),
+        tables.cluster_size, tables.k_tags, backend=_bk(backend),
+        queue_capacity=tables.n_neurons, with_stats=True,
+    )
+    ref = jnp.einsum("dst,bs->bdt", dense, spikes)
+    np.testing.assert_allclose(np.asarray(drive), np.asarray(ref), rtol=1e-5, atol=1e-6)
+    assert stats.dropped.shape == (b,)
+    assert int(np.asarray(stats.dropped).max()) == 0  # below capacity: lossless
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
 def test_backend_multidim_batch_shape(backend):
     """The [..., N] contract holds for >1 leading batch dims on every backend."""
     tables = _tables(23)
@@ -134,7 +167,7 @@ def test_backend_multidim_batch_shape(backend):
     np.testing.assert_allclose(np.asarray(drive), np.asarray(ref), rtol=1e-5, atol=1e-6)
 
 
-@pytest.mark.parametrize("backend", ["reference", "pallas", "sharded"])
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
 def test_backend_unbatched_shape_preserved(backend):
     """B-less inputs keep the original [N, 4] contract on every backend."""
     tables = _tables(5)
@@ -165,6 +198,35 @@ def test_cam_match_pallas_batched_matches_ref(b):
     syn = jnp.asarray(rng.integers(0, 4, (n, s)), jnp.int32)
     out_k = cam_match_pallas(act, tag, syn, c, block_c=8)
     out_r = cam_match_ref(act, tag, syn, c)
+    assert out_k.shape == (b, n, 4)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas kernel vs the jnp event-sparse reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b", [1, 3])
+def test_fused_deliver_pallas_matches_ref(b):
+    from repro.core.two_stage import compact_events
+    from repro.kernels.fused_deliver import fused_deliver, fused_deliver_ref
+
+    rng = np.random.default_rng(b + 40)
+    ncl, c, s, k, e = 3, 16, 8, 32, 4
+    n = ncl * c
+    src_tag = jnp.asarray(rng.integers(-1, k, (n, e)), jnp.int32)
+    src_dest = jnp.asarray(rng.integers(0, ncl, (n, e)), jnp.int32)
+    cam_tag = jnp.asarray(rng.integers(-1, k, (n, s)), jnp.int32)
+    cam_syn = jnp.asarray(rng.integers(0, 4, (n, s)), jnp.int32)
+    spikes = jnp.asarray(rng.random((b, n)) < 0.4, jnp.float32)
+    ext = jnp.asarray(rng.random((b, ncl, k)), jnp.float32)
+    queue = compact_events(spikes, 24)
+    out_k = fused_deliver(
+        queue, src_tag, src_dest, cam_tag, cam_syn, c, k,
+        external_activity=ext, block_c=8, interpret=True,
+    )
+    out_r = fused_deliver_ref(
+        queue, src_tag, src_dest, cam_tag, cam_syn, c, k, external_activity=ext
+    )
     assert out_k.shape == (b, n, 4)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-5)
 
@@ -206,7 +268,7 @@ def test_engine_batched_run_scan_shapes_and_no_nan():
     assert not bool(jnp.isnan(out).any())
 
 
-@pytest.mark.parametrize("backend", ["pallas", "sharded"])
+@pytest.mark.parametrize("backend", ["pallas", "sharded", "fused"])
 def test_engine_backends_agree_with_reference_batched(backend):
     tables = _tables(17)
     b = 2
