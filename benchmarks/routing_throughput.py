@@ -11,6 +11,13 @@ Rows (DESIGN.md §10):
   * ``sparse_*``                 — deliver-only events/s at 1% / 10% / 100%
                                    activity, event-queued vs dense: the
                                    event-sparsity headline
+  * ``fabric_*``                 — zero-latency vs fabric-mode engine step
+                                   (delay lines + link FIFOs + stats,
+                                   DESIGN.md §11): the cost of making the
+                                   mesh executable
+  * ``table4_measured_hops_*``   — mean mesh hops measured from simulated
+                                   traffic, hierarchical vs flat placement
+                                   (the empirical Table IV reproduction)
 
 ``BENCH_SMOKE=1`` shrinks geometry and iteration counts for CI smoke runs.
 """
@@ -174,4 +181,56 @@ def run() -> list[tuple[str, float, str]]:
             (f"sparse_{pct}pct_queue_B{b_top}", dt_queue_us,
              f"{ev_s_queue / 1e6:.2f}Mev_s_{ev_s_queue / ev_s_dense:.1f}x_vs_dense")
         )
+
+    # fabric-mode execution (DESIGN.md §11): the same network stepped with
+    # zero-latency delivery vs through delay lines + link FIFOs + stats.
+    grid, cl_f, b_f = (2, 8, 2) if SMOKE else (4, 16, 8)
+    hier = Fabric(grid_x=grid, grid_y=grid, cores_per_tile=4)
+    flat = Fabric(grid_x=2 * grid, grid_y=2 * grid, cores_per_tile=1)
+    n_cores, k_f = hier.n_cores, 64
+
+    def _fabric_net(fab):
+        rng = np.random.default_rng(11)
+        nf = n_cores * cl_f
+        spec = NetworkSpec(n_neurons=nf, cluster_size=cl_f, k_tags=k_f)
+        fan = min(8, cl_f)
+        for s in range(nf):
+            cl = int(rng.integers(n_cores))
+            dsts = cl * cl_f + rng.choice(cl_f, size=fan, replace=False)
+            spec.connect_one_to_many(s, [int(d) for d in dsts], int(rng.integers(4)))
+        return compile_network(spec, fabric=fab)
+
+    tables_h = _fabric_net(hier)
+    ev_f = int((np.asarray(tables_h.src_tag) >= 0).sum())
+    q_f = max(32, tables_h.n_neurons // 8)
+    inp_f = jnp.zeros((b_f, n_cores, k_f)).at[:, :, :8].set(2.0)
+    times = {}
+    for label, e in (
+        ("fabric_off", EventEngine(tables_h, queue_capacity=q_f)),
+        ("fabric_on", EventEngine(tables_h, queue_capacity=q_f, fabric=hier)),
+    ):
+        step_f = jax.jit(lambda cr, e=e: e.step(cr, inp_f))
+        dt_f_us, _ = _time_loop(step_f, e.init_state(batch=b_f), iters=n_iter_b)
+        times[label] = dt_f_us
+        ev_s = b_f * ev_f / (dt_f_us / 1e6)
+        extra = "" if label == "fabric_off" else (
+            f"_{times['fabric_on'] / times['fabric_off']:.2f}x_cost_vs_off"
+        )
+        out.append((f"{label}_step_B{b_f}", dt_f_us, f"{ev_s / 1e6:.2f}Mev_s{extra}"))
+
+    # empirical Table IV: mean mesh hops under the same traffic, hierarchical
+    # (4 cores/tile) vs flat (1 core/tile) placement of identical clusters
+    def _mean_hops(tables, fab):
+        e = EventEngine(tables, fabric=fab)
+        state, spikes, inflight = e.init_state()
+        carry = (state, jnp.ones_like(spikes), inflight)  # every source emits
+        _, (_, stats) = e.step(carry, jnp.zeros((n_cores, k_f)))
+        return float(stats.hops) / float(stats.delivered)
+
+    mh = _mean_hops(tables_h, hier)
+    mf = _mean_hops(_fabric_net(flat), flat)
+    out.append(("table4_measured_hops_hier", 0.0, f"{mh:.2f}"))
+    out.append(
+        ("table4_measured_hops_flat", 0.0, f"{mf:.2f}_{mf / mh:.2f}x_vs_hier")
+    )
     return out

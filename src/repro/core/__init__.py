@@ -8,7 +8,8 @@ Public surface of the paper's contribution:
 - ``dispatch``: pluggable batched dispatch backends (reference/pallas/sharded)
 - ``neuron``: AdExp-I&F + 4-type DPI synapse dynamics
 - ``event_engine``: scan-able SNN engine, sharded via shard_map
-- ``routing``: analytical R1/R2/R3 fabric model (latency/energy/traffic)
+- ``routing``: R1/R2/R3 fabric model (latency/energy/traffic) + the
+  per-cluster-pair delivery model driving fabric-mode execution (§11)
 - ``cnn``: spiking-CNN compiler (paper §V application)
 - ``shard_compat``: version-portable shard_map import + kwargs
 """

@@ -19,6 +19,9 @@ CAM match runs and whether the two stages are fused:
                     clusters over ``model``): stage-1 partials are
                     reduce-scattered to the owning cluster slab (the
                     R2/R3 point-to-point hop), stage-2 is fully local
+  * ``fabric``    — latency/bandwidth-aware delivery through the executable
+                    R1/R2/R3 model (DESIGN.md §11): tile binning, per-link
+                    FIFOs, delay lines, Table II-IV stats accumulators
 
 Every backend supports **event-sparse delivery**: pass ``queue_capacity`` to
 compact active spikes into a fixed-capacity AER queue (core/two_stage.py)
@@ -43,6 +46,7 @@ from repro.core.two_stage import (
     compact_events,
     stage1_route,
     stage1_route_events,
+    stage1_route_events_fabric,
     stage2_cam_match,
 )
 
@@ -53,6 +57,8 @@ __all__ = [
     "PallasBackend",
     "FusedBackend",
     "ShardedBackend",
+    "FabricBackend",
+    "advance_inflight",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -64,13 +70,30 @@ _REGISTRY: dict[str, type] = {}
 
 @dataclasses.dataclass(frozen=True)
 class DeliveryStats:
-    """Per-stream delivery statistics: ``dropped [...]`` int32 counts events
-    lost to AER-queue overflow this step (0 everywhere on the dense path)."""
+    """Per-stream delivery statistics.
+
+    ``dropped [...]`` int32 counts events lost to AER-queue overflow this
+    step (0 everywhere on the dense path). The remaining fields are filled
+    only by the fabric backend (DESIGN.md §11) and stay ``None`` elsewhere:
+    ``link_dropped`` counts events lost to inter-tile link-FIFO overflow,
+    ``delivered`` counts routed events, and ``hops`` / ``latency_s`` /
+    ``energy_j`` are per-step sums of the Table II-IV per-event figures
+    over delivered events.
+    """
 
     dropped: jax.Array
+    link_dropped: jax.Array | None = None
+    delivered: jax.Array | None = None
+    hops: jax.Array | None = None
+    latency_s: jax.Array | None = None
+    energy_j: jax.Array | None = None
 
 
-jax.tree_util.register_dataclass(DeliveryStats, data_fields=["dropped"], meta_fields=[])
+jax.tree_util.register_dataclass(
+    DeliveryStats,
+    data_fields=["dropped", "link_dropped", "delivered", "hops", "latency_s", "energy_j"],
+    meta_fields=[],
+)
 
 
 def register_backend(name: str):
@@ -328,6 +351,197 @@ class FusedBackend(DispatchBackend):
         )
         if with_stats:
             return drive, DeliveryStats(dropped=queue.dropped)
+        return drive
+
+
+def advance_inflight(buffer, inflight, max_delay: int):
+    """Advance the fabric delay line one step: ``(activity_now, new_inflight)``.
+
+    ``buffer [..., max_delay + 1, nc, K]`` is this step's routed scatter
+    (slot 0 = arriving now); ``inflight [..., max_delay, nc, K]`` is the
+    carried tail, or ``None`` to collapse every delay slot into the current
+    step (the single-shot statistical mode — returns ``None`` back). Shared
+    by :class:`FabricBackend` and the engine's sharded fabric step so local
+    and sharded execution cannot drift.
+    """
+    if inflight is None:
+        return buffer.sum(axis=-3), None
+    if max_delay == 0:
+        return buffer[..., 0, :, :], inflight  # inflight is empty [..., 0, nc, K]
+    a = buffer[..., 0, :, :] + inflight[..., 0, :, :]
+    shifted = jnp.concatenate(
+        [inflight[..., 1:, :, :], jnp.zeros_like(inflight[..., :1, :, :])], axis=-3
+    )
+    return a, shifted + buffer[..., 1:, :, :]
+
+
+@register_backend("fabric")
+class FabricBackend(DispatchBackend):
+    """Latency/bandwidth-aware delivery over the R1/R2/R3 fabric (§11).
+
+    Events are compacted into the AER queue, binned by (source, destination)
+    tile pair, pushed through per-link bandwidth FIFOs
+    (``r3_throughput_eps * dt`` events per directed tile pair per step,
+    deterministic lowest-source-id-first overflow), and scattered into a
+    delay-indexed activity buffer — cross-tile events arrive
+    ``ceil(mesh_hops * latency_across_chip_s / dt)`` steps later.
+
+    Two entry points:
+
+    * :meth:`deliver` (the registry API) models one *isolated* timestep:
+      link capacity and the hop/latency/energy accounting apply, but with no
+      delay line to thread the buffer is collapsed — every surviving event
+      is delivered in the same step ("zero-warp" statistical mode). With
+      infinite link capacity this is bit-identical to ``reference``.
+    * :meth:`deliver_fabric` takes and returns the in-flight buffer
+      (``[..., max_delay, n_clusters, K]``) so ``EventEngine(fabric=...)``
+      can carry it through the scan — events then really arrive late.
+
+    ``tile_of_cluster`` pins the placement (default: hierarchical linear);
+    per-event constants are precomputed once per cluster count
+    (routing.build_delivery_model) and uploaded as jnp constants.
+    """
+
+    def __init__(
+        self,
+        fabric=None,
+        tile_of_cluster=None,
+        dt: float = 1e-3,
+        vdd: float = 1.3,
+        link_capacity: int | None = None,
+    ):
+        from repro.core.routing import Fabric
+
+        self.fabric = fabric if fabric is not None else Fabric()
+        self.tile_of_cluster = tile_of_cluster
+        self.dt = float(dt)
+        self.vdd = vdd
+        self.link_capacity = link_capacity
+        self._models: dict[int, tuple] = {}
+
+    def model_for(self, n_clusters: int):
+        """(FabricDeliveryModel, jnp constant arrays) for a cluster count."""
+        cached = self._models.get(n_clusters)
+        if cached is None:
+            from repro.core.routing import build_delivery_model
+
+            model = build_delivery_model(
+                self.fabric,
+                n_clusters,
+                self.dt,
+                tile_of_cluster=self.tile_of_cluster,
+                vdd=self.vdd,
+                link_capacity=self.link_capacity,
+            )
+            arrays = {
+                "cluster_tile": jnp.asarray(model.tile_of_cluster),
+                "delay_steps": jnp.asarray(model.delay_steps),
+                "mesh_hops": jnp.asarray(model.mesh_hops),
+                "latency_s": jnp.asarray(model.latency_s),
+                "energy_j": jnp.asarray(model.energy_j),
+            }
+            cached = (model, arrays)
+            self._models[n_clusters] = cached
+        return cached
+
+    def init_inflight(
+        self,
+        n_clusters: int,
+        k_tags: int,
+        batch: int | tuple[int, ...] | None = None,
+        dtype=jnp.float32,
+    ) -> jax.Array:
+        """Zero in-flight buffer ``[..., max_delay, n_clusters, K]``."""
+        model, _ = self.model_for(n_clusters)
+        lead = () if batch is None else (batch,) if isinstance(batch, int) else tuple(batch)
+        return jnp.zeros((*lead, model.max_delay, n_clusters, k_tags), dtype)
+
+    def cam_match(self, activity, cam_tag, cam_syn, cluster_size, syn_onehot=None):
+        return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size, syn_onehot)
+
+    def deliver_fabric(
+        self,
+        spikes,
+        src_tag,
+        src_dest,
+        cam_tag,
+        cam_syn,
+        cluster_size,
+        k_tags,
+        inflight=None,  # [..., max_delay, n_clusters, K] or None (collapse delays)
+        external_activity=None,
+        queue_capacity=None,
+        syn_onehot=None,
+    ):
+        """Full fabric step: ``(drive, new_inflight, DeliveryStats)``.
+
+        ``new_inflight`` is ``None`` when ``inflight`` was ``None`` (the
+        collapsed single-shot mode used by :meth:`deliver`).
+        """
+        n = spikes.shape[-1]
+        n_clusters = n // cluster_size
+        model, arrs = self.model_for(n_clusters)
+        capacity = n if queue_capacity is None else queue_capacity
+        queue = compact_events(spikes, capacity)
+        route = stage1_route_events_fabric(
+            queue,
+            src_tag,
+            src_dest,
+            n_clusters,
+            k_tags,
+            cluster_size,
+            arrs["cluster_tile"],
+            arrs["delay_steps"],
+            model.n_tiles,
+            model.max_delay,
+            model.link_capacity,
+            mesh_hops=arrs["mesh_hops"],
+            latency_s=arrs["latency_s"],
+            energy_j=arrs["energy_j"],
+        )
+        a, new_inflight = advance_inflight(route.buffer, inflight, model.max_delay)
+        if external_activity is not None:
+            a = a + external_activity
+        drive = stage2_cam_match(a, cam_tag, cam_syn, cluster_size, syn_onehot)
+        stats = DeliveryStats(
+            dropped=queue.dropped,
+            link_dropped=route.link_dropped,
+            delivered=route.delivered,
+            hops=route.hops,
+            latency_s=route.latency_s,
+            energy_j=route.energy_j,
+        )
+        return drive, new_inflight, stats
+
+    def deliver(
+        self,
+        spikes,
+        src_tag,
+        src_dest,
+        cam_tag,
+        cam_syn,
+        cluster_size,
+        k_tags,
+        external_activity=None,
+        queue_capacity=None,
+        syn_onehot=None,
+        with_stats=False,
+    ):
+        drive, _, stats = self.deliver_fabric(
+            spikes,
+            src_tag,
+            src_dest,
+            cam_tag,
+            cam_syn,
+            cluster_size,
+            k_tags,
+            inflight=None,
+            external_activity=external_activity,
+            queue_capacity=queue_capacity,
+            syn_onehot=syn_onehot,
+        )
+        if with_stats:
+            return drive, stats
         return drive
 
 

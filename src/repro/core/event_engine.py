@@ -27,6 +27,14 @@ accelerators, so the neuron-state buffers are updated in place across a
 long run — but a carry you already stepped can then no longer be read
 (always thread the returned one).
 
+**Fabric mode** (DESIGN.md §11): construct with ``fabric=routing.Fabric(...)``
+(tables compiled with a placement via ``compile_network(spec, fabric=...)``)
+to push delivery through the executable R1/R2/R3 model — cross-tile events
+traverse per-hop delay lines (arriving ``ceil(hops * latency / dt)`` steps
+late; the carry gains the in-flight buffer) and bandwidth-limited inter-tile
+link FIFOs, with per-step hop/latency/energy accumulators and link-drop
+counts in the :class:`DeliveryStats` output.
+
 ``dense_reference_step`` is the oracle: the same network as one dense
 [N, N, 4] connectivity tensor (used by tests to prove routing equivalence),
 batched the same way.
@@ -104,6 +112,8 @@ class EventEngine:
         backend_options: dict | None = None,
         queue_capacity: int | None = None,
         donate_carry: bool = False,
+        fabric=None,  # routing.Fabric | dispatch.FabricBackend | None
+        fabric_options: dict | None = None,
     ):
         self.params = params or NeuronParams()
         self.cluster_size = tables.cluster_size
@@ -114,6 +124,53 @@ class EventEngine:
         if queue_capacity is not None and queue_capacity <= 0:
             raise ValueError(f"queue_capacity must be positive, got {queue_capacity}")
         self.queue_capacity = queue_capacity
+        # fabric mode (DESIGN.md §11): delivery runs on a FabricBackend and
+        # the step carry gains the in-flight delay-line buffer; cross-tile
+        # events arrive late and link FIFOs can drop. Takes precedence over
+        # ``backend`` for delivery (stage 2 runs the jnp reference there).
+        self.fabric_backend = None
+        if fabric is not None:
+            from repro.core.dispatch import FabricBackend
+
+            if isinstance(fabric, FabricBackend):
+                if fabric_options:
+                    raise ValueError(
+                        "fabric_options ignored: fabric was passed as a "
+                        "FabricBackend instance — configure it at construction"
+                    )
+                self.fabric_backend = fabric
+            else:
+                opts = dict(fabric_options or {})
+                opts.setdefault("tile_of_cluster", tables.tile_of_cluster)
+                opts.setdefault("dt", self.params.dt)
+                self.fabric_backend = FabricBackend(fabric=fabric, **opts)
+            # the backend must agree with this engine however it was built:
+            # a dt or placement mismatch silently warps arrival times / hops
+            if self.fabric_backend.dt != self.params.dt:
+                raise ValueError(
+                    f"fabric dt={self.fabric_backend.dt} != NeuronParams.dt="
+                    f"{self.params.dt}: delays and link capacity would be "
+                    "derived at a timestep the neurons do not integrate with"
+                )
+            if tables.tile_of_cluster is not None:
+                from repro.core.routing import default_tile_of_cluster
+
+                backend_tiles = self.fabric_backend.tile_of_cluster
+                if backend_tiles is None:
+                    backend_tiles = default_tile_of_cluster(
+                        self.n_clusters, self.fabric_backend.fabric
+                    )
+                if not np.array_equal(
+                    np.asarray(backend_tiles), tables.tile_of_cluster
+                ):
+                    raise ValueError(
+                        "fabric placement differs from the compiled tables' "
+                        "tile_of_cluster — pass tile_of_cluster="
+                        "tables.tile_of_cluster when constructing the backend"
+                    )
+            # build the delivery model eagerly: placement errors surface at
+            # engine construction, and max_delay is needed by init_state
+            self.fabric_model, _ = self.fabric_backend.model_for(self.n_clusters)
         cam_syn = jnp.asarray(tables.cam_syn)
         self.tables = _Tables(
             src_tag=jnp.asarray(tables.src_tag),
@@ -133,13 +190,24 @@ class EventEngine:
     # ------------------------------------------------------------------
     def init_state(
         self, batch: int | tuple[int, ...] | None = None
-    ) -> tuple[NeuronState, jax.Array]:
-        """(neuron state, previous-step spikes); batched when ``batch`` set."""
+    ) -> tuple[NeuronState, jax.Array] | tuple[NeuronState, jax.Array, jax.Array]:
+        """(neuron state, previous-step spikes); batched when ``batch`` set.
+
+        In fabric mode the carry gains a third element: the in-flight
+        delay-line buffer ``[..., max_delay, n_clusters, K]`` of cross-tile
+        events already on the mesh.
+        """
         lead = () if batch is None else (batch,) if isinstance(batch, int) else tuple(batch)
-        return (
+        carry = (
             neuron_mod.init_state(self.n_neurons, self.params, batch=batch),
             jnp.zeros((*lead, self.n_neurons), jnp.float32),
         )
+        if self.fabric_backend is None:
+            return carry
+        inflight = self.fabric_backend.init_inflight(
+            self.n_clusters, self.k_tags, batch=batch
+        )
+        return (*carry, inflight)
 
     def step(
         self,
@@ -151,12 +219,42 @@ class EventEngine:
         the engine was built with ``donate_carry=True``).
 
         Returns ``(carry, spikes)`` — or ``(carry, (spikes, DeliveryStats))``
-        when the engine was built with ``queue_capacity`` (drop counts are
-        part of the observable output so ``run``'s scan stacks them over T).
+        when the engine was built with ``queue_capacity`` or in fabric mode
+        (stats are part of the observable output so ``run``'s scan stacks
+        them over T; fabric mode always emits them — drops, hops, latency
+        and energy are the point of running the fabric model). In fabric
+        mode the carry is the 3-tuple from :meth:`init_state`, including the
+        in-flight delay-line buffer.
         """
         return self._jit_step(carry, input_activity, i_ext)
 
     def _step_impl(self, carry, input_activity, i_ext=None):
+        # inputs adopt the carry dtype: under x64, default-f64 stimulus
+        # arrays would otherwise promote the neuron state mid-scan and trip
+        # lax.scan's carry-type check
+        dtype = carry[1].dtype
+        input_activity = jnp.asarray(input_activity, dtype)
+        if i_ext is not None:
+            i_ext = jnp.asarray(i_ext, dtype)
+        if self.fabric_backend is not None:
+            state, prev_spikes, inflight = carry
+            drive, inflight, stats = self.fabric_backend.deliver_fabric(
+                prev_spikes,
+                self.tables.src_tag,
+                self.tables.src_dest,
+                self.tables.cam_tag,
+                self.tables.cam_syn,
+                self.cluster_size,
+                self.k_tags,
+                inflight=inflight,
+                external_activity=input_activity,
+                queue_capacity=self.queue_capacity,
+                syn_onehot=self.tables.cam_syn_onehot,
+            )
+            state, spikes = neuron_mod.neuron_step(state, drive, self.params, i_ext)
+            # fabric mode always reports stats: drops/hops/latency/energy are
+            # the point of running the fabric model
+            return (state, spikes, inflight), (spikes, stats)
         state, prev_spikes = carry
         drive, stats = backend_deliver(
             self.backend,
@@ -183,8 +281,28 @@ class EventEngine:
         i_ext: jax.Array | None = None,
     ):
         """Scan T steps; returns ``(final carry, spikes [T, ..., N])`` — with
-        ``queue_capacity`` set, ``(final carry, (spikes [T, ..., N],
-        DeliveryStats with dropped [T, ...]))``."""
+        ``queue_capacity`` (or fabric mode) set, ``(final carry, (spikes
+        [T, ..., N], DeliveryStats stacked over T))``.
+
+        ``i_ext`` may be time-varying: a ``[T, ..., N]`` current (one more
+        leading axis than the spike state, first axis of length ``T``) is
+        scanned alongside ``input_events`` — step ``t`` sees ``i_ext[t]``.
+        Anything of the spike state's rank or below is broadcast as a
+        per-step constant, so ``[N]`` with ``N == T`` or batched ``[B, N]``
+        with ``B == T`` are never misread as time series.
+        """
+        t = input_events.shape[0]
+        i_shape = () if i_ext is None else np.shape(i_ext)
+        time_varying = (
+            len(i_shape) == np.ndim(carry[1]) + 1 and i_shape[0] == t
+        )
+        if time_varying:
+
+            def body_t(c, xs):
+                inp, ie = xs
+                return self.step(c, inp, ie)
+
+            return jax.lax.scan(body_t, carry, (input_events, jnp.asarray(i_ext)))
 
         def body(c, inp):
             return self.step(c, inp, i_ext)
@@ -211,6 +329,16 @@ class EventEngine:
         With the engine's ``queue_capacity`` set, each device compacts its
         local slab through its own AER FIFO and the step returns
         ``(state, spikes, dropped)`` — ``dropped`` already summed fabric-wide.
+
+        In fabric mode (``EventEngine(fabric=...)``) the device mesh mirrors
+        the chip mesh: each device owns a contiguous slab of whole *tiles*
+        (the placement must not split a tile across devices), per-link FIFO
+        arbitration runs where the events originate — exact, since a
+        directed link's traffic all comes from one device — and the step
+        signature becomes ``(tables, state, prev_spikes, inflight,
+        input_activity, i_ext) -> (state, spikes, inflight, DeliveryStats)``
+        with the in-flight buffer sharded over the cluster axis and stats
+        psum-reduced fabric-wide.
         """
         from jax.sharding import PartitionSpec as P
 
@@ -222,6 +350,11 @@ class EventEngine:
         queue_capacity = self.queue_capacity
         if queue_capacity is not None:  # per-core FIFO: split capacity by slab
             queue_capacity = max(1, -(-queue_capacity // n_dev))
+
+        if self.fabric_backend is not None:
+            return self._make_sharded_fabric_step(
+                mesh, axis, batch_axis, n_dev, queue_capacity
+            )
 
         from repro.core.dispatch import sharded_local_deliver
 
@@ -269,6 +402,103 @@ class EventEngine:
                 spec_c,
             ),
             out_specs=out_specs,
+            **SM_CHECK_KW,
+        )
+
+    def _make_sharded_fabric_step(self, mesh, axis, batch_axis, n_dev, queue_capacity):
+        """Fabric-mode shard_map step: tiles -> devices (see make_sharded_step)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.dispatch import DeliveryStats, advance_inflight
+        from repro.core.two_stage import (
+            compact_events,
+            stage1_route_events_fabric,
+            stage2_cam_match,
+        )
+
+        params = self.params
+        cluster_size, k_tags = self.cluster_size, self.k_tags
+        n_clusters = self.n_clusters
+        nc_local = n_clusters // n_dev
+        model, arrs = self.fabric_backend.model_for(n_clusters)
+        # the device mesh mirrors the chip mesh only if no tile straddles a
+        # device boundary — every link's traffic then originates on exactly
+        # one device and per-device FIFO arbitration is globally exact
+        slab_of_cluster = np.arange(n_clusters) // nc_local
+        for t in np.unique(model.tile_of_cluster):
+            devs = np.unique(slab_of_cluster[model.tile_of_cluster == t])
+            if devs.size > 1:
+                raise ValueError(
+                    f"tile {t} is split across devices {devs.tolist()}: fabric-"
+                    "sharded execution needs each tile's clusters on one device "
+                    "(use the hierarchical linear placement or re-shard)"
+                )
+
+        def local_step(tables, state, prev_spikes, inflight, input_activity, i_ext):
+            n_local = prev_spikes.shape[-1]
+            capacity = n_local if queue_capacity is None else queue_capacity
+            offset = jax.lax.axis_index(axis) * nc_local
+            queue = compact_events(prev_spikes, capacity)
+            route = stage1_route_events_fabric(
+                queue,
+                tables.src_tag,
+                tables.src_dest,
+                n_clusters,
+                k_tags,
+                cluster_size,
+                arrs["cluster_tile"],
+                arrs["delay_steps"],
+                model.n_tiles,
+                model.max_delay,
+                model.link_capacity,
+                mesh_hops=arrs["mesh_hops"],
+                latency_s=arrs["latency_s"],
+                energy_j=arrs["energy_j"],
+                src_cluster_offset=offset,
+            )
+            # hand every (delay, cluster) slab to its owner — the R3 hop
+            buf = jax.lax.psum_scatter(
+                route.buffer, axis, scatter_dimension=route.buffer.ndim - 2, tiled=True
+            )  # [..., max_delay + 1, nc_local, K]
+            a, new_inflight = advance_inflight(buf, inflight, model.max_delay)
+            a = a + input_activity
+            drive = stage2_cam_match(
+                a, tables.cam_tag, tables.cam_syn, cluster_size, tables.cam_syn_onehot
+            )
+            state, spikes = neuron_mod.neuron_step(state, drive, params, i_ext)
+            stats = DeliveryStats(
+                dropped=jax.lax.psum(queue.dropped, axis),
+                link_dropped=jax.lax.psum(route.link_dropped, axis),
+                delivered=jax.lax.psum(route.delivered, axis),
+                hops=jax.lax.psum(route.hops, axis),
+                latency_s=jax.lax.psum(route.latency_s, axis),
+                energy_j=jax.lax.psum(route.energy_j, axis),
+            )
+            return state, spikes, new_inflight, stats
+
+        spec_t = P(axis)
+        if batch_axis is None:
+            spec_c = P(axis)
+            spec_f = P(None, axis)  # inflight [D, nc, K]: shard clusters
+            spec_d = P()
+        else:
+            spec_c = P(batch_axis, axis)
+            spec_f = P(batch_axis, None, axis)  # [B, D, nc, K]
+            spec_d = P(batch_axis)
+        state_spec = NeuronState(spec_c, spec_c, spec_c, spec_c)
+        stats_spec = DeliveryStats(spec_d, spec_d, spec_d, spec_d, spec_d, spec_d)
+        return shard_map(
+            local_step,
+            mesh=mesh,
+            in_specs=(
+                _Tables(spec_t, spec_t, spec_t, spec_t, spec_t),
+                state_spec,
+                spec_c,
+                spec_f,
+                spec_c,
+                spec_c,
+            ),
+            out_specs=(state_spec, spec_c, spec_f, stats_spec),
             **SM_CHECK_KW,
         )
 

@@ -18,7 +18,16 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["ChipConstants", "Fabric", "avg_distance_hierarchical", "avg_distance_mesh"]
+__all__ = [
+    "ChipConstants",
+    "Fabric",
+    "FabricDeliveryModel",
+    "build_delivery_model",
+    "default_tile_of_cluster",
+    "validate_placement",
+    "avg_distance_hierarchical",
+    "avg_distance_mesh",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,9 +86,27 @@ class Fabric:
         return self.n_cores * self.neurons_per_core
 
     # -- addressing ------------------------------------------------------
+    def tile_index(self, core: int) -> int:
+        """Linear tile id of a core. Raises on out-of-range ids — wrapping
+        silently (core 36 on a 3x3x4 fabric aliasing core 0) hides mis-sized
+        placements."""
+        if not 0 <= core < self.n_cores:
+            raise ValueError(
+                f"core {core} out of range for a "
+                f"{self.grid_x}x{self.grid_y}x{self.cores_per_tile} fabric "
+                f"({self.n_cores} cores)"
+            )
+        return core // self.cores_per_tile
+
     def tile_of_core(self, core: int) -> tuple[int, int]:
-        t = core // self.cores_per_tile
+        t = self.tile_index(core)
         return t % self.grid_x, t // self.grid_x
+
+    def tile_xy(self, tile: int) -> tuple[int, int]:
+        """(x, y) mesh coordinates of a linear tile id."""
+        if not 0 <= tile < self.n_tiles:
+            raise ValueError(f"tile {tile} out of range ({self.n_tiles} tiles)")
+        return tile % self.grid_x, tile // self.grid_x
 
     def hops(self, src_core: int, dst_core: int) -> dict:
         """Router traversals for one event src->dst (XY routing for R3)."""
@@ -123,6 +150,14 @@ class Fabric:
         dst_cores[c]: stage-1 destination cores of core c's neurons.
         Returns events/s at each hierarchy level + utilization bounds.
         """
+        if len(rates_hz) != self.n_cores:
+            raise ValueError(
+                f"rates_hz has {len(rates_hz)} entries, fabric has {self.n_cores} cores"
+            )
+        if len(dst_cores) != self.n_cores:
+            raise ValueError(
+                f"dst_cores has {len(dst_cores)} entries, fabric has {self.n_cores} cores"
+            )
         c = self.constants
         r1 = np.zeros(self.n_cores)
         r3_total = 0.0
@@ -152,6 +187,138 @@ class Fabric:
         """
         bandwidth = 1.0 / self.constants.broadcast_time_s
         return bandwidth / (self.neurons_per_core * rate_hz)
+
+
+# ---------------------------------------------------------------------------
+# Executable delivery model: per-cluster-pair constants for the event engine
+# ---------------------------------------------------------------------------
+def default_tile_of_cluster(n_clusters: int, fabric: Fabric) -> np.ndarray:
+    """Hierarchical (linear) placement: cluster c -> tile c // cores_per_tile.
+
+    Consecutive clusters fill each tile's cores before moving to the next
+    tile — the paper's hierarchy assumption (local traffic resolves below
+    the R3 mesh).
+    """
+    if n_clusters > fabric.n_cores:
+        raise ValueError(
+            f"{n_clusters} clusters do not fit on a fabric with {fabric.n_cores} cores"
+        )
+    return (np.arange(n_clusters, dtype=np.int32) // fabric.cores_per_tile).astype(
+        np.int32
+    )
+
+
+def validate_placement(
+    fabric: Fabric, n_clusters: int, tile_of_cluster: np.ndarray | None
+) -> np.ndarray:
+    """Normalize + validate a cluster->tile placement; O(n_clusters).
+
+    ``None`` yields the hierarchical linear default. Checks shape, tile-id
+    range, and per-tile core capacity. Shared by :func:`build_delivery_model`
+    and ``tags.compile_network`` (which must not pay the model's O(nc^2)
+    matrix build just to validate).
+    """
+    if tile_of_cluster is None:
+        return default_tile_of_cluster(n_clusters, fabric)
+    tiles = np.asarray(tile_of_cluster, dtype=np.int32)
+    if tiles.shape != (n_clusters,):
+        raise ValueError(
+            f"tile_of_cluster has shape {tiles.shape}, expected ({n_clusters},)"
+        )
+    if tiles.size and (tiles.min() < 0 or tiles.max() >= fabric.n_tiles):
+        raise ValueError(
+            f"tile ids must lie in [0, {fabric.n_tiles}); got "
+            f"[{tiles.min()}, {tiles.max()}]"
+        )
+    counts = np.bincount(tiles, minlength=fabric.n_tiles)
+    if counts.max(initial=0) > fabric.cores_per_tile:
+        raise ValueError(
+            f"placement puts {counts.max()} clusters on one tile; the fabric "
+            f"has {fabric.cores_per_tile} cores per tile"
+        )
+    return tiles
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricDeliveryModel:
+    """Per-cluster-pair constants driving executable fabric delivery.
+
+    The event engine's fabric mode (core/dispatch.py ``FabricBackend``,
+    DESIGN.md §11) gathers these [n_clusters, n_clusters] tables per routed
+    event instead of calling the scalar :class:`Fabric` methods: mesh hop
+    counts, arrival delays in integer timesteps, and the Table II/III
+    latency/energy figures for the per-step accumulators (link-FIFO bins are
+    derived from ``tile_of_cluster`` at routing time). Host-side numpy; the
+    dispatch backend uploads them once as jnp constants.
+    """
+
+    tile_of_cluster: np.ndarray  # [nc] int32 linear tile id per cluster
+    n_tiles: int
+    mesh_hops: np.ndarray  # [nc, nc] int32 R3 (XY Manhattan) hops
+    delay_steps: np.ndarray  # [nc, nc] int32 arrival delay, 0 = same step
+    latency_s: np.ndarray  # [nc, nc] float32 per-event latency (Table II)
+    energy_j: np.ndarray  # [nc, nc] float32 per-event energy (Table III/IV)
+    link_capacity: int  # events per directed inter-tile link per step
+    max_delay: int  # delay_steps.max()
+
+
+def build_delivery_model(
+    fabric: Fabric,
+    n_clusters: int,
+    dt: float,
+    tile_of_cluster: np.ndarray | None = None,
+    vdd: float = 1.3,
+    link_capacity: int | None = None,
+) -> FabricDeliveryModel:
+    """Precompute the per-cluster-pair fabric constants for a placement.
+
+    ``tile_of_cluster[c]`` is the linear tile id hosting engine cluster
+    (core) ``c`` — default is the hierarchical linear placement. Distinct
+    clusters on one tile are distinct cores (R2 hop, no mesh hops); only the
+    diagonal is the same-core case. Cross-tile events arrive
+    ``ceil(mesh_hops * latency_across_chip_s / dt)`` steps later — the
+    broadcast/R1/R2 portion of the latency is far below any usable ``dt``
+    and is folded into the engine's intrinsic one-step spike->drive delay.
+    ``link_capacity`` defaults to ``r3_throughput_eps * dt`` events per
+    directed tile pair per step (each pair modeled as a virtual channel;
+    physical XY link sharing is not modeled).
+    """
+    if dt <= 0:
+        raise ValueError(f"dt must be positive, got {dt}")
+    tiles = validate_placement(fabric, n_clusters, tile_of_cluster)
+    c = fabric.constants
+    tx = tiles % fabric.grid_x
+    ty = tiles // fabric.grid_x
+    hops = np.abs(tx[:, None] - tx[None, :]) + np.abs(ty[:, None] - ty[None, :])
+    hops = hops.astype(np.int32)
+    same_core = np.eye(n_clusters, dtype=bool)
+    # vectorized Fabric.latency_s / Fabric.energy_j (r1/r2 follow same_core)
+    r1 = np.where(same_core, 1, 2)
+    r2 = np.where(same_core, 0, 2)
+    latency = c.broadcast_time_s + hops * c.latency_across_chip_s
+    latency = latency + np.where(r2 > 0, (r1 + r2 - 2) * c.r3_latency_s, 0.0)
+    e = c.energy_j[vdd]
+    energy = e["spike"] + e["encode"] + e["broadcast"] + e["pulse_extend"]
+    energy = energy + np.where(r2 > 0, e["route_core"], 0.0)
+    energy = energy + hops * c.energy_per_hop_j
+    # arrival delay in steps; the 1e-9 guards float-ceil off-by-one on exact
+    # multiples of dt
+    delay = np.ceil(hops * c.latency_across_chip_s / dt - 1e-9).astype(np.int32)
+    delay = np.maximum(delay, 0)
+    if link_capacity is None:
+        link_capacity = max(1, int(c.r3_throughput_eps * dt))
+    elif link_capacity <= 0:
+        raise ValueError(f"link_capacity must be positive, got {link_capacity}")
+    return FabricDeliveryModel(
+        tile_of_cluster=tiles,
+        n_tiles=fabric.n_tiles,
+        mesh_hops=hops,
+        delay_steps=delay,
+        latency_s=latency.astype(np.float32),
+        energy_j=energy.astype(np.float32),
+        link_capacity=int(link_capacity),
+        max_delay=int(delay.max(initial=0)),
+    )
 
 
 # ---------------------------------------------------------------------------

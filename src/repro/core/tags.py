@@ -28,9 +28,12 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Iterable, Sequence
+from typing import TYPE_CHECKING, Iterable, Sequence
 
 import numpy as np
+
+if TYPE_CHECKING:  # placement typing only; no import cycle at runtime
+    from repro.core.routing import Fabric
 
 __all__ = ["SynapseType", "NetworkSpec", "RoutingTables", "compile_network"]
 
@@ -119,6 +122,10 @@ class RoutingTables:
     cam_syn: np.ndarray  # [N, S]  (valid only where cam_tag >= 0)
     cluster_size: int
     k_tags: int
+    # optional physical placement: linear tile id hosting each cluster (core)
+    # on a routing.Fabric — consumed by the fabric-mode event engine
+    # (DESIGN.md §11). None = no placement compiled in.
+    tile_of_cluster: np.ndarray | None = None
 
     @property
     def n_neurons(self) -> int:
@@ -169,8 +176,25 @@ class RoutingTables:
         return np.asarray(sorted(rows), dtype=np.int32).reshape(-1, 3)
 
 
-def compile_network(spec: NetworkSpec) -> RoutingTables:
-    """Greedy tag allocation (paper Appendix A: 'tag re-assignment')."""
+def compile_network(
+    spec: NetworkSpec,
+    fabric: "Fabric | None" = None,
+    tile_of_cluster: np.ndarray | Sequence[int] | None = None,
+) -> RoutingTables:
+    """Greedy tag allocation (paper Appendix A: 'tag re-assignment').
+
+    With ``fabric`` set the tables additionally carry a cluster->tile
+    placement (``tile_of_cluster``, validated against the fabric geometry;
+    default: hierarchical linear placement) so the fabric-mode event engine
+    can derive per-event mesh hops, delays, and link assignments.
+    """
+    placement = None
+    if tile_of_cluster is not None and fabric is None:
+        raise ValueError("tile_of_cluster requires a fabric to validate against")
+    if fabric is not None:
+        from repro.core.routing import validate_placement
+
+        placement = validate_placement(fabric, spec.n_clusters, tile_of_cluster)
     n = spec.n_neurons
     src_entries: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # (tag, cluster)
     cam_entries: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # (tag, syn)
@@ -187,6 +211,11 @@ def compile_network(spec: NetworkSpec) -> RoutingTables:
         return t
 
     for srcs, by_cluster, shared, copies in spec._groups:
+        if not srcs:
+            # an empty source set sends nothing: allocating here (the shared
+            # branch used to) burns one tag per destination cluster that no
+            # SRAM entry emits and no CAM word needs
+            continue
         for cluster, tgts in sorted(by_cluster.items()):
             if shared:
                 tags_for_src = {s: None for s in srcs}
@@ -239,4 +268,5 @@ def compile_network(spec: NetworkSpec) -> RoutingTables:
         cam_syn=cam_syn,
         cluster_size=spec.cluster_size,
         k_tags=spec.k_tags,
+        tile_of_cluster=placement,
     )

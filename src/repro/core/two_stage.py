@@ -28,6 +28,12 @@ queue with an overflow/drop counter matching the chip's congestion
 behavior. :func:`stage1_route_events` then scatters only the queued events'
 SRAM entries, so stage-1 cost scales with event count, not network size.
 
+**Fabric-mode stage 1** (DESIGN.md §11): :func:`stage1_route_events_fabric`
+bins the queued events by (source, destination) tile pair, arbitrates each
+directed inter-tile link's bandwidth FIFO (via :func:`dispatch_slots`, bins =
+tile pairs), and scatters survivors into a delay-indexed buffer so cross-tile
+events arrive hop-latency steps later.
+
 The same functions implement MoE dispatch in models/moe.py:
 clusters = expert groups, tags = expert ids, CAM subscription = expert
 residency; :func:`dispatch_slots` is the shared sort-based slot assignment.
@@ -48,6 +54,8 @@ __all__ = [
     "two_stage_deliver",
     "compact_events",
     "stage1_route_events",
+    "stage1_route_events_fabric",
+    "FabricRouteResult",
     "gather_event_entries",
     "precompute_syn_onehot",
     "dispatch_slots",
@@ -233,6 +241,129 @@ def stage1_route_events(
 
 
 # ---------------------------------------------------------------------------
+# stage 1, fabric mode — tile binning, link FIFOs, delay-indexed scatter
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FabricRouteResult:
+    """Outcome of one fabric-mode stage-1 pass (DESIGN.md §11).
+
+    ``buffer[..., d, c, t]`` is the tag activity arriving at cluster ``c``
+    under tag ``t`` in ``d`` steps (``d = 0`` = this step); ``link_dropped``
+    counts events lost to inter-tile link-FIFO overflow; ``delivered``
+    counts routed (kept) events. ``hops`` / ``latency_s`` / ``energy_j``
+    are per-step sums over delivered events of the Table II-IV per-event
+    figures (``None`` when the matrices were not supplied).
+    """
+
+    buffer: jax.Array  # [..., max_delay + 1, n_clusters, K]
+    link_dropped: jax.Array  # [...] int32
+    delivered: jax.Array  # [...] int32
+    hops: jax.Array | None = None  # [...] int32
+    latency_s: jax.Array | None = None  # [...] float32
+    energy_j: jax.Array | None = None  # [...] float32
+
+
+jax.tree_util.register_dataclass(
+    FabricRouteResult,
+    data_fields=["buffer", "link_dropped", "delivered", "hops", "latency_s", "energy_j"],
+    meta_fields=[],
+)
+
+
+def stage1_route_events_fabric(
+    queue: EventQueue,  # src [..., Q] LOCAL neuron ids into src_tag's rows
+    src_tag: jax.Array,  # [N_local, E]
+    src_dest: jax.Array,  # [N_local, E] GLOBAL destination cluster ids
+    n_clusters: int,  # global cluster count
+    k_tags: int,
+    cluster_size: int,
+    cluster_tile: jax.Array,  # [n_clusters] int32 linear tile id per cluster
+    delay_steps: jax.Array,  # [n_clusters, n_clusters] int32 arrival delays
+    n_tiles: int,
+    max_delay: int,
+    link_capacity: int | None,  # events per directed tile pair per step; None = inf
+    mesh_hops: jax.Array | None = None,  # [nc, nc] optional stats matrices
+    latency_s: jax.Array | None = None,
+    energy_j: jax.Array | None = None,
+    src_cluster_offset: int | jax.Array = 0,  # sharded: global id of local cluster 0
+) -> FabricRouteResult:
+    """Event-sparse stage 1 through the R1/R2/R3 fabric.
+
+    The zero-latency :func:`stage1_route_events` scatters every queued
+    event's SRAM entries straight into this step's activity. Here each entry
+    is first *binned by its (source tile, destination tile) pair*:
+
+      * intra-tile entries (R1/R2 only) keep the zero-latency path — they
+        land in ``buffer[0]``;
+      * cross-tile entries contend for their directed link's FIFO — the
+        first ``link_capacity`` events per link (arbiter order: queue slot
+        order, i.e. lowest source id first) win, the rest are dropped and
+        counted (:func:`dispatch_slots` semantics, bins = tile pairs);
+      * surviving cross-tile entries land ``delay_steps[src, dst]`` slots
+        deep in the buffer — the delay line the engine's scan carries.
+
+    Per-event stats are summed over *delivered* entries only (each SRAM
+    entry is one AER event on the fabric, regardless of its weight).
+    """
+    ev_tag, ev_dest = gather_event_entries(queue, src_tag, src_dest)  # [..., Q, E]
+    valid = ev_tag >= 0
+    src_cl = jnp.where(
+        queue.src >= 0, queue.src // cluster_size + src_cluster_offset, 0
+    ).astype(jnp.int32)
+    src_cl_e = jnp.broadcast_to(src_cl[..., None], ev_tag.shape)  # [..., Q, E]
+    dst_cl = jnp.clip(ev_dest, 0, n_clusters - 1)
+    pair = src_cl_e * n_clusters + dst_cl  # flat [nc, nc] index
+    src_tile = jnp.take(cluster_tile, src_cl_e, mode="clip")
+    dst_tile = jnp.take(cluster_tile, dst_cl, mode="clip")
+    cross = (src_tile != dst_tile) & valid
+
+    if link_capacity is None:
+        keep_cross = jnp.ones_like(cross)
+    else:
+        bins = jnp.where(cross, src_tile * n_tiles + dst_tile, -1)
+        batch_shape = bins.shape[:-2]
+        flat_bins = bins.reshape(-1, bins.shape[-2] * bins.shape[-1])
+        _, keep_flat = jax.vmap(
+            lambda e: dispatch_slots(e, n_tiles * n_tiles, link_capacity)
+        )(flat_bins)
+        keep_cross = keep_flat.reshape(*batch_shape, *bins.shape[-2:])
+
+    kept = valid & (~cross | keep_cross)
+    link_dropped = (cross & ~keep_cross).sum((-1, -2), dtype=jnp.int32)
+    delivered = kept.sum((-1, -2), dtype=jnp.int32)
+
+    delay = jnp.take(delay_steps.reshape(-1), pair, mode="clip")
+    size = (max_delay + 1) * n_clusters * k_tags
+    flat = jnp.where(
+        kept, (delay * n_clusters + dst_cl) * k_tags + jnp.clip(ev_tag, 0), size
+    )
+    weights = queue.weight[..., None] * kept.astype(queue.weight.dtype)
+    batch_shape = queue.src.shape[:-1]
+    if not batch_shape:
+        a = jnp.zeros((size,), dtype=weights.dtype)
+        a = a.at[flat.reshape(-1)].add(weights.reshape(-1), mode="drop")
+    else:
+        b = math.prod(batch_shape)
+        a = _accumulate_activity(flat.reshape(b, -1), weights.reshape(b, -1), size)
+    buffer = a.reshape(*batch_shape, max_delay + 1, n_clusters, k_tags)
+
+    def _sum_over_kept(matrix, dtype):
+        if matrix is None:
+            return None
+        vals = jnp.take(matrix.reshape(-1), pair, mode="clip")
+        return jnp.where(kept, vals, 0).sum((-1, -2), dtype=dtype)
+
+    return FabricRouteResult(
+        buffer=buffer,
+        link_dropped=link_dropped,
+        delivered=delivered,
+        hops=_sum_over_kept(mesh_hops, jnp.int32),
+        latency_s=_sum_over_kept(latency_s, jnp.float32),
+        energy_j=_sum_over_kept(energy_j, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
 # stage 2 — broadcast + CAM match
 # ---------------------------------------------------------------------------
 def precompute_syn_onehot(cam_syn: jax.Array, dtype=jnp.float32) -> jax.Array:
@@ -334,6 +465,10 @@ def dispatch_slots(flat_e: jax.Array, n_bins: int, cap: int):
     where bins are experts/shards and ``cap`` is the expert capacity.
     """
     a = flat_e.shape[0]
+    # normalize inactive markers: a negative bin would sort BEFORE the valid
+    # bins (inflating their in-bin positions) and wrap in the counts scatter —
+    # fold them onto the high sentinel the masking already handles
+    flat_e = jnp.where(flat_e < 0, n_bins, flat_e)
     order = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[order]
     counts = jnp.zeros((n_bins,), jnp.int32).at[sorted_e].add(1, mode="drop")

@@ -72,3 +72,29 @@ def test_traffic_utilization_bounds():
     t = f.traffic(rates, dsts)
     assert t["broadcast_utilization"] < 1.0  # within the 38 Mev/s bound
     assert t["r3_utilization"] < 1.0
+
+
+def test_tile_of_core_rejects_out_of_range():
+    """Regression: core 36 on a 3x3x4 fabric used to alias core 0 via %."""
+    f = Fabric(grid_x=3, grid_y=3, cores_per_tile=4)
+    assert f.tile_of_core(35) == (2, 2)
+    with pytest.raises(ValueError, match="out of range"):
+        f.tile_of_core(36)
+    with pytest.raises(ValueError, match="out of range"):
+        f.tile_of_core(-1)
+    with pytest.raises(ValueError, match="out of range"):
+        f.hops(0, f.n_cores)  # hops/latency/energy inherit the check
+    with pytest.raises(ValueError, match="out of range"):
+        f.tile_xy(f.n_tiles)
+
+
+def test_traffic_validates_input_lengths():
+    f = Fabric(grid_x=2, grid_y=1)
+    rates = np.full(f.n_cores, 20.0)
+    dsts = [[0] for _ in range(f.n_cores)]
+    with pytest.raises(ValueError, match="rates_hz"):
+        f.traffic(rates[:-1], dsts)
+    with pytest.raises(ValueError, match="dst_cores"):
+        f.traffic(rates, dsts[:-1])
+    with pytest.raises(ValueError, match="out of range"):
+        f.traffic(rates, [[f.n_cores]] + dsts[1:])

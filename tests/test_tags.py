@@ -47,6 +47,21 @@ def test_shared_tag_group_semantics():
     assert (tables.src_tag[0] >= 0).sum() == 1
 
 
+def test_empty_source_group_allocates_no_tags():
+    """Regression: connect_group with no sources used to burn one tag per
+    destination cluster (shared branch) — tags nothing sends and no CAM word
+    subscribes to. K=1 leaves no headroom for leaks."""
+    spec = NetworkSpec(n_neurons=32, cluster_size=8, k_tags=1, max_cam_words=8)
+    spec.connect_group([], [(16, SynapseType.FAST_EXC), (24, SynapseType.FAST_EXC)])
+    spec.connect(0, 16)  # must still get cluster 2's single tag
+    tables = compile_network(spec)
+    got = {(int(s), int(d)) for s, d, _ in tables.dense_equivalent()}
+    assert got == {(0, 16)}
+    # the empty group left no trace in either memory
+    assert (tables.cam_tag[24] >= 0).sum() == 0
+    assert tables.sram_bits() == (tables.src_tag >= 0).sum() * (1 + 2)
+
+
 def test_tag_overflow_raises():
     spec = NetworkSpec(n_neurons=32, cluster_size=8, k_tags=2, max_cam_words=8)
     spec.connect(0, 16)

@@ -93,6 +93,48 @@ def test_engine_run_scan_no_nan():
     assert not bool(jnp.isnan(out).any())
 
 
+def test_engine_run_time_varying_i_ext_matches_per_step():
+    """Regression: a [T, ...] external current must be scanned per step, not
+    broadcast whole every step (which silently mis-applied all T currents at
+    once)."""
+    tables = _tables(13)
+    eng = EventEngine(tables)
+    t = 20
+    rng = np.random.default_rng(0)
+    i_ext = jnp.asarray(
+        rng.uniform(0, 3e3, size=(t, tables.n_neurons)), jnp.float32
+    )
+    inp = jnp.zeros((t, tables.n_clusters, tables.k_tags)).at[:, :, :4].set(2.0)
+    _, out_run = eng.run(eng.init_state(), inp, i_ext)
+    carry = eng.init_state()
+    per_step = []
+    for step in range(t):
+        carry, spikes = eng.step(carry, inp[step], i_ext[step])
+        per_step.append(np.asarray(spikes))
+    np.testing.assert_array_equal(np.asarray(out_run), np.stack(per_step))
+    assert np.asarray(out_run).sum() > 0  # the current did drive spikes
+    # constant (non-time-varying) i_ext still broadcasts as before
+    _, out_const = eng.run(eng.init_state(), inp, i_ext[0])
+    carry = eng.init_state()
+    for step in range(t):
+        carry, spikes = eng.step(carry, inp[step], i_ext[0])
+    np.testing.assert_array_equal(np.asarray(out_const[-1]), np.asarray(spikes))
+    # a batched per-stream constant [B, N] with B == T must NOT be misread
+    # as a time series (it has the spike state's rank, not rank + 1)
+    b = t
+    i_const = jnp.asarray(
+        rng.uniform(0, 3e3, size=(b, tables.n_neurons)), jnp.float32
+    )
+    inp_b = jnp.broadcast_to(
+        inp[:, None], (t, b, tables.n_clusters, tables.k_tags)
+    )
+    _, out_b = eng.run(eng.init_state(batch=b), inp_b, i_const)
+    carry = eng.init_state(batch=b)
+    for step in range(t):
+        carry, spikes_b = eng.step(carry, inp_b[step], i_const)
+    np.testing.assert_array_equal(np.asarray(out_b[-1]), np.asarray(spikes_b))
+
+
 def test_inhibition_reduces_firing():
     """Subtractive-inhibition events must not increase firing (paper §IV-A)."""
     spec = NetworkSpec(n_neurons=16, cluster_size=16, k_tags=16, max_cam_words=8)
