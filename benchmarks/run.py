@@ -4,6 +4,7 @@
   Table IV  -> comparison           Table V + Fig 12   -> cnn_poker
   Fig 13 + §II headline -> memory_scaling
   beyond-paper (MoE dispatch mapping) -> dispatch
+  beyond-paper (multi-tenant AER serving, DESIGN.md §12) -> serving
   §Roofline artifacts -> roofline
 
 Prints ``name,us_per_call,derived`` CSV and writes the routing/dispatch rows
@@ -18,7 +19,7 @@ import sys
 import traceback
 
 # modules whose rows land in BENCH_routing.json (the event-delivery hot path)
-_ROUTING_MODULES = ("routing_throughput", "dispatch")
+_ROUTING_MODULES = ("routing_throughput", "dispatch", "serving")
 
 
 def main() -> None:
@@ -30,6 +31,7 @@ def main() -> None:
         memory_scaling,
         roofline,
         routing_throughput,
+        serving,
     )
 
     modules = [
@@ -39,6 +41,7 @@ def main() -> None:
         ("comparison", comparison),
         ("cnn_poker", cnn_poker),
         ("dispatch", dispatch),
+        ("serving", serving),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,90 @@
+"""Continuous-batching AER serving benchmark (DESIGN.md §12).
+
+Serves synthetic poker-DVS sessions through the multi-tenant session pool
+(serve/aer.py) over the compiled Table-V network and reports, per
+(dispatch backend x pool size):
+
+  * sessions/s — completed classifications per wall-clock second under
+    sustained load (admissions backfill evictions every step);
+  * p50/p99 decision latency in simulated ms (steps x dt);
+  * the per-engine-step cost in us (the us_per_call column).
+
+Backends: ``reference`` (zero-latency queued delivery), ``fused``
+(single-kernel stage-1+2; jnp event-sparse reference off-TPU), ``fabric``
+(delay lines + link FIFOs — per-tenant in-flight state, DESIGN.md §11).
+
+``BENCH_SMOKE=1`` shrinks to a pool of 2 and a handful of steps; the CI
+bench-smoke job asserts these rows land in BENCH_routing.json.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.cnn import compile_poker_cnn, poker_neuron_params
+from repro.data.pipeline import DvsStreamConfig, DvsStreamSource
+from repro.serve.aer import (
+    AerServeConfig,
+    AerSessionPool,
+    DvsSession,
+    build_poker_engine,
+)
+
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def _sessions(n: int, seed: int = 11) -> list[DvsSession]:
+    rng = np.random.default_rng(seed)
+    suits = rng.integers(0, 4, n)
+    return [
+        DvsSession(
+            i,
+            DvsStreamSource(
+                DvsStreamConfig(symbol=int(suits[i]), events_per_step=16, seed=seed),
+                session_id=i,
+            ),
+            label=int(suits[i]),
+        )
+        for i in range(n)
+    ]
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    # throughput benchmark: the default readout wiring decides just as fast
+    # as the Hebbian-tuned one (examples/poker_dvs_serve.py tunes for
+    # accuracy; here only the serving machinery is under measurement)
+    cc = compile_poker_cnn()
+    pools = (2,) if SMOKE else (8, 64)
+    backends = ("reference", "fabric") if SMOKE else ("reference", "fused", "fabric")
+    max_steps = 12 if SMOKE else 60
+    dt_ms = poker_neuron_params().dt * 1e3
+    for backend in backends:
+        engine = build_poker_engine(cc.tables, backend)
+        for pool_size in pools:
+            pool = AerSessionPool(
+                cc, engine, AerServeConfig(pool_size=pool_size, max_steps=max_steps)
+            )
+            n_sessions = 2 * pool_size
+            # warm the jitted step + reset paths outside the timed region
+            pool.serve(_sessions(max(2, pool_size // 4), seed=5))
+            steps0 = pool.n_steps
+            t0 = time.perf_counter()
+            results = pool.serve(_sessions(n_sessions))
+            wall = time.perf_counter() - t0
+            steps = pool.n_steps - steps0
+            lat = np.array([r.latency_steps for r in results], dtype=np.float64)
+            sess_s = len(results) / wall
+            p50 = np.percentile(lat, 50) * dt_ms
+            p99 = np.percentile(lat, 99) * dt_ms
+            out.append(
+                (
+                    f"serving_{backend}_pool{pool_size}",
+                    wall / steps * 1e6,
+                    f"{sess_s:.1f}sess_s_p50_{p50:.0f}ms_p99_{p99:.0f}ms",
+                )
+            )
+    return out

@@ -13,30 +13,16 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cnn import compile_poker_cnn
+from repro.core.cnn import compile_poker_cnn, hebbian_readout_select, poker_neuron_params
 from repro.core.event_engine import EventEngine
-from repro.core.neuron import NeuronParams
+from repro.data.pipeline import symbol_dvs_events
 
 SUITS = ["diamond(|)", "club(-)", "spade(^)", "heart(v)"]
 
 
 def symbol_events(symbol: int, n_events: int, rng, jitter: float = 1.0) -> np.ndarray:
     """Synthetic DVS event cloud for one card flash (suit-specific edges)."""
-    if symbol == 0:
-        ys = rng.integers(6, 26, n_events)
-        xs = 15 + rng.normal(0, jitter, n_events)
-    elif symbol == 1:
-        xs = rng.integers(6, 26, n_events)
-        ys = 15 + rng.normal(0, jitter, n_events)
-    elif symbol == 2:
-        t = rng.uniform(-1, 1, n_events)
-        xs = 16 + t * 10 + rng.normal(0, jitter, n_events)
-        ys = 8 + np.abs(t) * 14
-    else:
-        t = rng.uniform(-1, 1, n_events)
-        xs = 16 + t * 10 + rng.normal(0, jitter, n_events)
-        ys = 24 - np.abs(t) * 14
-    return np.stack([np.clip(ys, 0, 31).astype(int), np.clip(xs, 0, 31).astype(int)], 1)
+    return symbol_dvs_events(symbol, n_events, rng, input_hw=32, jitter=jitter)
 
 
 def pool_activity(cc, eng, event_streams, t_steps=40, drive=10.0):
@@ -64,8 +50,7 @@ def main():
     from repro.core.cnn import CnnConfig
 
     rng = np.random.default_rng(7)
-    params = NeuronParams(refrac=1e-3, b_adapt=1e-3, input_gain=0.3,
-                          w_syn=(1.0, 3.0, 1.0, 1.0))
+    params = poker_neuron_params()
 
     # ---- offline Hebbian readout tuning (paper §V): find the 64 pool
     # neurons most selective for each class, wire them to its population ----
@@ -76,8 +61,7 @@ def main():
     streams = [symbol_events(sym, 400, rng) for sym in range(4) for _ in range(3)]
     pa, _ = pool_activity(cc0, eng0, streams)  # [12, 256]
     acts = pa.reshape(4, 3, -1).sum(1)  # [4, 256]
-    selectivity = acts - acts.mean(0, keepdims=True)
-    fc_select = np.stack([np.argsort(-selectivity[c])[:64] for c in range(4)])
+    fc_select = hebbian_readout_select(acts)
     print("Hebbian-selected pool neurons per class:",
           [int((fc_select[c] // 64 == c).sum()) for c in range(4)],
           "(from own feature map)")

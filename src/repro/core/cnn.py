@@ -39,7 +39,29 @@ import numpy as np
 
 from repro.core.tags import NetworkSpec, RoutingTables, SynapseType, compile_network
 
-__all__ = ["CnnConfig", "CompiledCnn", "compile_poker_cnn", "edge_kernels"]
+__all__ = [
+    "CnnConfig",
+    "CompiledCnn",
+    "compile_poker_cnn",
+    "edge_kernels",
+    "hebbian_readout_select",
+    "poker_neuron_params",
+]
+
+
+def poker_neuron_params():
+    """The §V operating point: neuron/synapse biases tuned so the Table-V
+    network classifies within the paper's <30 ms decision window.
+
+    One definition shared by the batch example, the serving example, the
+    serving benchmark, and the tests — the numbers they report are only
+    comparable if they run the same network.
+    """
+    from repro.core.neuron import NeuronParams
+
+    return NeuronParams(
+        refrac=1e-3, b_adapt=1e-3, input_gain=0.3, w_syn=(1.0, 3.0, 1.0, 1.0)
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,29 +90,68 @@ class CompiledCnn:
     out: tuple[int, int]
     conv_clusters: tuple[int, ...]
 
-    def input_activity(self, events_yx) -> np.ndarray:
+    def input_activity(self, events_yx, on_invalid: str = "raise") -> np.ndarray:
         """DVS events -> external tag activity.
 
         ``events_yx`` is either one stream ``[n_ev, 2]`` of (y, x) rows,
         giving ``[n_clusters, K]``, or a sequence of B streams (one per DVS
         sensor / user), giving batched activity ``[B, n_clusters, K]`` ready
         for the batched engine.
+
+        Real sensor packets contain garbage: a coordinate outside
+        ``[0, input_hw)`` would either build a tag past the pixel block or
+        silently alias a *different* pixel (y=1, x=-1 is pixel (0, 31) under
+        row-major flattening). ``on_invalid`` makes the policy explicit:
+
+          * ``"raise"`` (default) — reject the packet with ``ValueError``;
+            a server validates at the edge and never lets one bad packet
+            poison a whole serving batch.
+          * ``"clip"``  — clamp coordinates into range (what the synthetic
+            generators in data/pipeline.py do at the source).
+          * ``"drop"``  — discard out-of-range events, keep the rest.
         """
+        if on_invalid not in ("raise", "clip", "drop"):
+            raise ValueError(
+                f"on_invalid must be 'raise', 'clip' or 'drop', got {on_invalid!r}"
+            )
         if isinstance(events_yx, (list, tuple)):
-            return self.input_activity_batch(events_yx)
+            return self.input_activity_batch(events_yx, on_invalid)
         c = self.cfg
         a = np.zeros((self.tables.n_clusters, c.k_tags), dtype=np.float32)
-        if len(events_yx) == 0:
+        events_yx = np.asarray(events_yx)
+        if events_yx.size == 0:
             return a
-        tags = events_yx[:, 0].astype(np.int64) * c.input_hw + events_yx[:, 1]
+        if events_yx.ndim != 2 or events_yx.shape[1] != 2:
+            raise ValueError(
+                f"events must be [n_ev, 2] (y, x) rows, got shape {events_yx.shape}"
+            )
+        ev = events_yx.astype(np.int64)
+        ok = ((ev >= 0) & (ev < c.input_hw)).all(axis=1)
+        if not ok.all():
+            if on_invalid == "raise":
+                bad = ev[~ok][0]
+                raise ValueError(
+                    f"DVS event (y={bad[0]}, x={bad[1]}) outside the "
+                    f"{c.input_hw}x{c.input_hw} sensor; pass on_invalid='clip' "
+                    "or 'drop' to accept malformed packets"
+                )
+            if on_invalid == "clip":
+                ev = np.clip(ev, 0, c.input_hw - 1)
+            else:  # drop
+                ev = ev[ok]
+                if len(ev) == 0:
+                    return a
+        tags = ev[:, 0] * c.input_hw + ev[:, 1]
         counts = np.bincount(tags, minlength=c.input_hw * c.input_hw).astype(np.float32)
         for cl in self.conv_clusters:
             a[cl, : c.input_hw * c.input_hw] += counts
         return a
 
-    def input_activity_batch(self, event_streams) -> np.ndarray:
+    def input_activity_batch(self, event_streams, on_invalid: str = "raise") -> np.ndarray:
         """B DVS streams (each [n_ev_i, 2]) -> batched activity [B, n_clusters, K]."""
-        return np.stack([self.input_activity(np.asarray(ev)) for ev in event_streams])
+        return np.stack(
+            [self.input_activity(np.asarray(ev), on_invalid) for ev in event_streams]
+        )
 
 
 def edge_kernels(k: int = 8) -> np.ndarray:
@@ -108,6 +169,26 @@ def edge_kernels(k: int = 8) -> np.ndarray:
             ks[2, y, x] = 1.0 if 0 <= d <= 1 else (-1.0 if d > 2 else 0.0)
     ks[3] = ks[2, ::-1, :]  # downward vertex
     return ks
+
+
+def hebbian_readout_select(
+    class_pool_rates: np.ndarray, pop_per_class: int = 64
+) -> np.ndarray:
+    """Offline-Hebbian readout selection (paper §V): per class, the
+    ``pop_per_class`` pooling neurons most *selective* for that class.
+
+    ``class_pool_rates [n_classes, n_pool]`` is the summed pooling-layer
+    activity measured while presenting each class's stimuli. Selectivity is
+    activity relative to the cross-class mean, so a neuron active for
+    everything is not selected for anything. The result feeds
+    :func:`compile_poker_cnn`'s ``fc_select`` — shared by the batch example
+    and the serving path so both wire the same readout.
+    """
+    rates = np.asarray(class_pool_rates, dtype=np.float64)
+    selectivity = rates - rates.mean(0, keepdims=True)
+    return np.stack(
+        [np.argsort(-selectivity[c])[:pop_per_class] for c in range(len(rates))]
+    )
 
 
 def compile_poker_cnn(cfg: CnnConfig = CnnConfig(), fc_select: np.ndarray | None = None):

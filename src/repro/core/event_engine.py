@@ -35,6 +35,13 @@ late; the carry gains the in-flight buffer) and bandwidth-limited inter-tile
 link FIFOs, with per-step hop/latency/energy accumulators and link-drop
 counts in the :class:`DeliveryStats` output.
 
+**Multi-tenant serving** (DESIGN.md §12): batch slots are tenants.
+``EventEngine.reset_slots(carry, mask)`` surgically restores masked slots
+to freshly-initialized state — neuron state, undelivered previous-step
+spikes, and the fabric in-flight buffer — so a session pool (serve/aer.py)
+can admit and evict independent users without recompiling or leaking state
+between a slot's successive occupants.
+
 ``dense_reference_step`` is the oracle: the same network as one dense
 [N, N, 4] connectivity tensor (used by tests to prove routing equivalence),
 batched the same way.
@@ -71,6 +78,7 @@ from repro.core.two_stage import N_SYN_TYPES, precompute_syn_onehot
 __all__ = [
     "EventEngine",
     "DeliveryStats",
+    "reset_slots",
     "dense_weights_from_tables",
     "dense_reference_step",
 ]
@@ -186,6 +194,7 @@ class EventEngine:
         # debuggers do exactly that — hence the conservative default).
         donate = _donate_carry_kwargs() if donate_carry else {}
         self._jit_step = jax.jit(self._step_impl, **donate)
+        self._jit_reset = jax.jit(self._reset_impl)
 
     # ------------------------------------------------------------------
     def init_state(
@@ -273,6 +282,27 @@ class EventEngine:
         state, spikes = neuron_mod.neuron_step(state, drive, self.params, i_ext)
         out = spikes if self.queue_capacity is None else (spikes, stats)
         return (state, spikes), out
+
+    def reset_slots(self, carry, mask):
+        """Per-slot state surgery for multi-tenant serving (DESIGN.md §12).
+
+        ``mask`` is a boolean array over the carry's leading batch dims
+        (``True`` = wipe that slot). Masked slots are restored to the
+        freshly-initialized state of :meth:`init_state`: neuron state back
+        to rest, previous-step spikes cleared, and — in fabric mode — that
+        slot's in-flight delay-line buffer zeroed, so a departing tenant's
+        still-in-transit cross-tile events can never leak into the slot's
+        next occupant. Unmasked slots are untouched (bit-identical), which
+        is what lets a session pool admit/evict tenants independently while
+        the others keep running.
+        """
+        return self._jit_reset(carry, jnp.asarray(mask))
+
+    def _reset_impl(self, carry, mask):
+        if mask.ndim < 1:
+            raise ValueError("reset_slots needs a batched carry (mask per slot)")
+        fresh = self.init_state(batch=mask.shape)
+        return reset_slots(carry, mask, fresh)
 
     def run(
         self,
@@ -501,6 +531,26 @@ class EventEngine:
             out_specs=(state_spec, spec_c, spec_f, stats_spec),
             **SM_CHECK_KW,
         )
+
+
+# ---------------------------------------------------------------------------
+# Per-slot state surgery
+# ---------------------------------------------------------------------------
+def reset_slots(carry, mask: jax.Array, fresh):
+    """Replace masked slots of ``carry`` with the matching slots of ``fresh``.
+
+    ``carry`` and ``fresh`` are any pytrees of identically-shaped arrays
+    whose leading dims start with ``mask``'s shape (the slot axes); every
+    leaf is selected slot-wise. This is the functional core of
+    :meth:`EventEngine.reset_slots` — kept standalone so custom serving
+    loops can splice arbitrary per-slot state (e.g. a checkpointed tenant)
+    instead of the engine's fresh init.
+    """
+    def sel(cur, new):
+        m = mask.reshape(mask.shape + (1,) * (cur.ndim - mask.ndim))
+        return jnp.where(m, jnp.asarray(new, cur.dtype), cur)
+
+    return jax.tree_util.tree_map(sel, carry, fresh)
 
 
 # ---------------------------------------------------------------------------

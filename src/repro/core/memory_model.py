@@ -61,7 +61,10 @@ class RoutingParams:
 
     @property
     def n_clusters(self) -> int:
-        return max(1, self.n // self.c)
+        """Clusters needed to host N neurons — ceil, so a ragged tail cluster
+        (n % c != 0) is counted instead of silently dropping its neurons
+        from feasibility/traffic numbers."""
+        return max(1, math.ceil(self.n / self.c))
 
     @property
     def stage1_fanout(self) -> int:

@@ -1,6 +1,6 @@
-"""Deterministic, resumable, sharded token pipeline.
+"""Deterministic, resumable, sharded data pipeline.
 
-Two sources behind one interface:
+Token sources behind one interface:
 
 * ``SyntheticSource``: counter-based PRNG token stream (threefry on
   (seed, step, shard)) — fully deterministic, O(1) state, used by smoke
@@ -8,6 +8,13 @@ Two sources behind one interface:
 * ``FileSource``: memory-mapped flat token file (uint16/uint32), strided by
   (host, step) — restart-safe because the cursor is derived from the step
   counter, never from consumed state.
+
+Event sources for the AER serving path (DESIGN.md §12):
+
+* ``DvsStreamSource``: per-session synthetic poker-DVS symbol stream —
+  ``events(step)`` is a pure function of (seed, session_id, step), so a
+  serving slot evicted and re-admitted (or a restarted server) replays the
+  identical event sequence from any step counter.
 
 Determinism + statelessness is the fault-tolerance story: a restarted (or
 re-elasticized) job continues from ``step`` with byte-identical batches; no
@@ -82,3 +89,74 @@ def make_source(cfg: DataConfig, host_id: int = 0, n_hosts: int = 1):
     if cfg.path:
         return FileSource(cfg, host_id, n_hosts)
     return SyntheticSource(cfg, host_id, n_hosts)
+
+
+# ---------------------------------------------------------------------------
+# DVS event streams (paper §V poker symbols, serving input path)
+# ---------------------------------------------------------------------------
+def symbol_dvs_events(
+    symbol: int, n_events: int, rng, input_hw: int = 32, jitter: float = 1.0
+) -> np.ndarray:
+    """Synthetic DVS event cloud for one poker-suit flash: ``[n_events, 2]``
+    (y, x) rows on a ``input_hw x input_hw`` sensor.
+
+    Suit geometry matches the paper's §V edge features: 0 = vertical bar
+    (diamond edge), 1 = horizontal bar (club), 2 = upward vertex (spade),
+    3 = downward vertex (heart). Shared by the batch example and the
+    serving stream source so both present identical stimuli.
+    """
+    if not 0 <= symbol < 4:
+        raise ValueError(f"symbol must be in [0, 4), got {symbol}")
+    s = input_hw / 32.0  # geometry scales with sensor resolution
+    if symbol == 0:
+        ys = rng.integers(int(6 * s), int(26 * s), n_events)
+        xs = 15 * s + rng.normal(0, jitter, n_events)
+    elif symbol == 1:
+        xs = rng.integers(int(6 * s), int(26 * s), n_events)
+        ys = 15 * s + rng.normal(0, jitter, n_events)
+    elif symbol == 2:
+        t = rng.uniform(-1, 1, n_events)
+        xs = 16 * s + t * 10 * s + rng.normal(0, jitter, n_events)
+        ys = 8 * s + np.abs(t) * 14 * s
+    else:
+        t = rng.uniform(-1, 1, n_events)
+        xs = 16 * s + t * 10 * s + rng.normal(0, jitter, n_events)
+        ys = 24 * s - np.abs(t) * 14 * s
+    hi = input_hw - 1
+    return np.stack(
+        [np.clip(ys, 0, hi).astype(np.int64), np.clip(xs, 0, hi).astype(np.int64)], 1
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DvsStreamConfig:
+    """One tenant's synthetic DVS stream (a user holding a card to a sensor)."""
+
+    symbol: int  # poker suit in [0, 4)
+    events_per_step: int = 16  # sensor events per engine timestep
+    input_hw: int = 32
+    jitter: float = 1.0
+    seed: int = 0
+
+
+class DvsStreamSource:
+    """Stateless per-session DVS stream: ``events(step)`` is a pure function.
+
+    Like :class:`SyntheticSource`, the cursor is the step counter — never
+    consumed state — so a serving slot can be evicted, its session resumed
+    elsewhere, and the replayed stream is byte-identical. Distinct
+    ``session_id``s give statistically independent streams of the same
+    symbol (the PRNG is seeded on (seed, session_id, step)).
+    """
+
+    def __init__(self, cfg: DvsStreamConfig, session_id: int = 0):
+        self.cfg = cfg
+        self.session_id = int(session_id)
+
+    def events(self, step: int) -> np.ndarray:
+        """DVS events ``[events_per_step, 2]`` emitted during ``step``."""
+        cfg = self.cfg
+        rng = np.random.default_rng([cfg.seed, self.session_id, int(step)])
+        return symbol_dvs_events(
+            cfg.symbol, cfg.events_per_step, rng, cfg.input_hw, cfg.jitter
+        )

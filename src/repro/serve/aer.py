@@ -1,0 +1,310 @@
+"""Continuous-batching AER serving: a multi-tenant DVS session pool.
+
+This is the serving layer the ROADMAP's "heavy traffic from millions of
+users" north star asks for, on the paper's flagship workload (§V): many
+independent users each holding a card to a DVS sensor, classified in real
+time on the shared multi-core fabric. The shape mirrors `serve/engine.py`'s
+continuous-batching sketch for LM slots, transcribed to the event engine
+(DESIGN.md §12):
+
+  * a **fixed-slot pool**: the engine carry is batched to ``pool_size``
+    once; every slot is one tenant's complete fabric state (neuron state,
+    previous-step spikes, and — in fabric mode — the in-flight delay-line
+    buffer of that tenant's cross-tile events still on the mesh);
+  * one **jitted micro-batched step** drives all slots through the batched
+    ``EventEngine`` (any dispatch backend: reference / pallas / fused /
+    sharded, or fabric mode) — occupancy changes never recompile because
+    vacancy is data (zero input, zeroed state), not shape;
+  * **independent admit/evict**: a departing tenant's slot is wiped with
+    ``EventEngine.reset_slots`` before reuse, so no membrane charge, FIFO
+    statistics, or still-in-transit fabric events leak between tenants.
+
+Input enters through ``CompiledCnn.input_activity`` with an explicit
+malformed-packet policy (``on_invalid``): "clip"/"drop" sanitize at the
+edge, and under "raise" the pool converts the rejection into a *session*
+fault (the offending tenant is terminated with ``SessionResult.error``
+set) — one bad sensor packet never takes down the other tenants' batch.
+
+Readout is the paper's majority rule: per-session cumulative output-
+population spike counts, decided when the leading class crosses a
+threshold (latency-to-decision in steps = ms at dt = 1 ms), with a forced
+argmax decision at ``max_steps``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core.cnn import CompiledCnn, poker_neuron_params
+from repro.core.event_engine import EventEngine
+from repro.data.pipeline import DvsStreamSource
+
+__all__ = [
+    "AerServeConfig",
+    "DvsSession",
+    "SessionResult",
+    "AerSessionPool",
+    "build_poker_engine",
+]
+
+
+def build_poker_engine(tables, backend: str = "reference") -> EventEngine:
+    """Event engine at the §V serving operating point for a dispatch backend.
+
+    ``backend`` is any registry name (reference / pallas / fused / sharded)
+    or ``"fabric"`` for executable-mesh delivery on the default 3x3-chip
+    board geometry. The AER queue is sized lossless for this workload.
+    Shared by examples/poker_dvs_serve.py and benchmarks/serving.py so both
+    measure the same engine.
+    """
+    params = poker_neuron_params()
+    q_cap = tables.n_neurons
+    if backend == "fabric":
+        from repro.core.routing import Fabric
+
+        return EventEngine(tables, params, queue_capacity=q_cap, fabric=Fabric())
+    return EventEngine(tables, params, backend=backend, queue_capacity=q_cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class AerServeConfig:
+    pool_size: int = 8
+    drive: float = 8.0  # event count -> tag-activity gain
+    decision_threshold: float = 3.0  # cumulative winning-population spikes
+    min_steps: int = 2  # never decide before this many steps
+    max_steps: int = 60  # forced argmax decision after this many steps
+    on_invalid: str = "raise"  # malformed-packet policy (see CompiledCnn)
+
+
+@dataclasses.dataclass
+class DvsSession:
+    """One tenant: an event-stream source plus its readout accumulator."""
+
+    session_id: int
+    source: DvsStreamSource
+    label: int | None = None  # ground truth when known (synthetic streams)
+    # runtime state, owned by the pool
+    step: int = 0  # steps since admission (= the source's cursor)
+    counts: np.ndarray | None = None  # [n_classes] cumulative output spikes
+    dropped: int = 0  # cumulative AER-queue drops
+    link_dropped: int = 0  # cumulative fabric link-FIFO drops
+    error: str | None = None  # input fault: the session failed, not the pool
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionResult:
+    session_id: int
+    label: int | None
+    prediction: int
+    decided: bool  # True: threshold crossed; False: forced at max_steps
+    latency_steps: int  # steps from admission to decision
+    counts: np.ndarray  # [n_classes] final cumulative output spikes
+    dropped: int
+    link_dropped: int
+    error: str | None = None  # set when the session was terminated on a fault
+
+    @property
+    def correct(self) -> bool | None:
+        return None if self.label is None else self.prediction == self.label
+
+
+class AerSessionPool:
+    """Fixed-slot continuous batching over the batched event engine.
+
+    ``engine`` may be any :class:`EventEngine` over the compiled CNN's
+    tables — queued, fused, sharded or fabric-mode; the pool only assumes
+    the batch-native step contract. The carry is allocated once at
+    ``pool_size`` and surgically reset per slot on eviction.
+    """
+
+    def __init__(self, cc: CompiledCnn, engine: EventEngine, cfg: AerServeConfig):
+        if engine.n_neurons != cc.tables.n_neurons:
+            raise ValueError(
+                f"engine serves {engine.n_neurons} neurons, compiled CNN has "
+                f"{cc.tables.n_neurons}"
+            )
+        if cfg.pool_size <= 0:
+            raise ValueError(f"pool_size must be positive, got {cfg.pool_size}")
+        self.cc = cc
+        self.engine = engine
+        self.cfg = cfg
+        self.n_classes = cc.cfg.n_classes
+        self.carry = engine.init_state(batch=cfg.pool_size)
+        self.slots: list[DvsSession | None] = [None] * cfg.pool_size
+        self.n_steps = 0  # engine steps taken (all slots advance together)
+        self._zero_act = np.zeros(
+            (cc.tables.n_clusters, cc.cfg.k_tags), dtype=np.float32
+        )
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def occupied(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admit(self, session: DvsSession) -> int:
+        """Claim a free slot for ``session``; raises when the pool is full.
+
+        The slot's fabric state was wiped at the previous tenant's eviction
+        (and is all-zero at construction), so the new tenant starts from
+        exactly the freshly-initialized state a solo run would see.
+        """
+        free = self.free_slots
+        if not free:
+            raise RuntimeError("session pool is full; evict before admitting")
+        slot = free[0]
+        session.step = 0
+        session.counts = np.zeros(self.n_classes, dtype=np.float64)
+        session.dropped = 0
+        session.link_dropped = 0
+        session.error = None  # a re-admitted session retries with a clean slate
+        self.slots[slot] = session
+        return slot
+
+    def evict(self, slot: int) -> SessionResult:
+        """Finalize and remove the tenant in ``slot``; wipe the slot's state.
+
+        The reset covers the neuron state, the previous-step spike vector,
+        and — in fabric mode — the slot's in-flight delay-line buffer:
+        cross-tile events the departing tenant still has on the mesh are
+        tenant state and must never arrive in the next occupant's network.
+        """
+        return self.evict_many([slot])[0]
+
+    def evict_many(self, slots: list[int]) -> list[SessionResult]:
+        """Evict several tenants with ONE masked carry reset.
+
+        ``reset_slots`` rewrites every leaf of the whole pool-sized carry
+        regardless of how many slots the mask selects, so evictions that
+        land on the same step (synchronized admissions deciding together)
+        are folded into a single jitted pass instead of one per tenant.
+        """
+        slots = list(dict.fromkeys(slots))  # dedupe, preserve order
+        # validate before mutating: a bad id must not leave earlier slots
+        # freed-but-unreset (the next admit would land on dirty tenant state)
+        for slot in slots:
+            if not 0 <= slot < self.cfg.pool_size:
+                raise ValueError(f"slot {slot} out of range")
+            if self.slots[slot] is None:
+                raise ValueError(f"slot {slot} is not occupied")
+        results = []
+        mask = np.zeros(self.cfg.pool_size, dtype=bool)
+        for slot in slots:
+            sess = self.slots[slot]
+            decided, _ = self._decision(sess)
+            results.append(
+                SessionResult(
+                    session_id=sess.session_id,
+                    label=sess.label,
+                    prediction=int(np.argmax(sess.counts)),
+                    decided=decided,
+                    latency_steps=sess.step,
+                    counts=sess.counts.copy(),
+                    dropped=sess.dropped,
+                    link_dropped=sess.link_dropped,
+                    error=sess.error,
+                )
+            )
+            self.slots[slot] = None
+            mask[slot] = True
+        if mask.any():
+            self.carry = self.engine.reset_slots(self.carry, mask)
+        return results
+
+    # -- stepping ----------------------------------------------------------
+    def step(self) -> np.ndarray:
+        """Advance every slot one engine timestep; returns spikes ``[P, N]``.
+
+        Occupied slots are driven by their session's stream events for the
+        session's own step counter; vacant slots see zero input on zeroed
+        state (they stay silent — vacancy costs batch lanes, not
+        correctness). One jitted engine step serves the whole pool.
+
+        A malformed packet under ``on_invalid="raise"`` faults *its
+        session* — the tenant is marked errored (terminated at the next
+        eviction sweep) and sees zero input, while every other tenant's
+        step proceeds. One bad sensor never takes down the pool.
+        """
+        acts = []
+        for sess in self.slots:
+            if sess is None:
+                acts.append(self._zero_act)
+                continue
+            try:
+                a = self.cc.input_activity(
+                    sess.source.events(sess.step), on_invalid=self.cfg.on_invalid
+                )
+            except ValueError as e:
+                sess.error = str(e)
+                a = None
+            acts.append(self._zero_act if a is None else a * self.cfg.drive)
+        inp = np.stack(acts)  # [P, nc, K]
+        self.carry, out = self.engine.step(self.carry, inp)
+        spikes, stats = out if isinstance(out, tuple) else (out, None)
+        spikes = np.asarray(spikes)
+        self.n_steps += 1
+
+        o0, o1 = self.cc.out
+        per_class = (
+            spikes[:, o0:o1].reshape(self.cfg.pool_size, self.n_classes, -1).sum(-1)
+        )
+        dropped = None if stats is None else np.asarray(stats.dropped)
+        link_dropped = (
+            None
+            if stats is None or stats.link_dropped is None
+            else np.asarray(stats.link_dropped)
+        )
+        for i, sess in enumerate(self.slots):
+            if sess is None:
+                continue
+            sess.counts += per_class[i]
+            sess.step += 1
+            if dropped is not None:
+                sess.dropped += int(dropped[i])
+            if link_dropped is not None:
+                sess.link_dropped += int(link_dropped[i])
+        return spikes
+
+    def _decision(self, sess: DvsSession) -> tuple[bool, bool]:
+        """(threshold crossed, finished) for one session."""
+        decided = (
+            sess.error is None
+            and sess.step >= self.cfg.min_steps
+            and float(sess.counts.max()) >= self.cfg.decision_threshold
+        )
+        finished = decided or sess.step >= self.cfg.max_steps or sess.error is not None
+        return decided, finished
+
+    def finished_slots(self) -> list[int]:
+        """Slots whose tenant has reached a decision (or the step cap)."""
+        return [
+            i
+            for i, s in enumerate(self.slots)
+            if s is not None and self._decision(s)[1]
+        ]
+
+    # -- drain loop --------------------------------------------------------
+    def serve(self, sessions) -> list[SessionResult]:
+        """Serve ``sessions`` to completion with continuous batching.
+
+        Admissions backfill free slots every step, evictions happen the
+        step a tenant decides — the pool never drains between users, which
+        is what keeps utilization (and sessions/s) flat under sustained
+        load. Results are returned in completion order.
+        """
+        pending = deque(sessions)
+        results: list[SessionResult] = []
+        while pending or self.occupied:
+            while pending and self.free_slots:
+                self.admit(pending.popleft())
+            self.step()
+            finished = self.finished_slots()
+            if finished:
+                results.extend(self.evict_many(finished))
+        return results

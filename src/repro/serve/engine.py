@@ -4,7 +4,8 @@ Minimal production shape: a jitted prefill and a jitted single-token decode
 step over a fixed batch slot layout; greedy or temperature sampling;
 per-slot stop handling. Continuous batching at fleet scale would swap slots
 between requests — the cache layout (batch-major ring buffers, positions
-array) is already slot-addressable for that.
+array) is already slot-addressable for that; `serve/aer.py` implements
+exactly that slot-pool lifecycle for the event engine (DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -35,17 +36,27 @@ class Engine:
         """tokens: [B, S_prompt] int32 (right-aligned, no padding support in
         this minimal engine). Returns [B, max_new]."""
         b, s = tokens.shape
+        if max_new <= 0:
+            return jnp.zeros((b, 0), jnp.int32)
+        if s + max_new > self.cfg.max_len:
+            # decode positions past max_len would wrap the ring-buffer KV
+            # cache and silently clobber the oldest entries
+            raise ValueError(
+                f"prompt ({s}) + max_new ({max_new}) exceeds max_len "
+                f"({self.cfg.max_len}): decode would run off the KV cache"
+            )
         caches = self.model.init_caches(b, self.cfg.max_len)
         logits, caches = self._prefill(self.params, tokens, caches, batch_extras)
         key = jax.random.PRNGKey(self.cfg.seed)
-        out = []
         cur = self._sample(logits[:, -1], key)
-        for t in range(max_new):
-            out.append(cur)
+        out = [cur]
+        # max_new - 1 decode steps: the last output token needs no forward pass
+        for t in range(max_new - 1):
             pos = jnp.full((b, 1), s + t, jnp.int32)
             logits, caches = self._decode(self.params, cur[:, None], pos, caches)
             key = jax.random.fold_in(key, t)
             cur = self._sample(logits[:, 0], key)
+            out.append(cur)
         return jnp.stack(out, axis=1)
 
     def _sample(self, logits, key):

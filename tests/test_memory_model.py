@@ -72,6 +72,17 @@ def test_optimized_beats_conventional(n, f):
     assert mm.mem_at_optimal_m(n, f, 256) < mm.conventional_bits(n, f)
 
 
+def test_n_clusters_counts_ragged_tail():
+    """n % c != 0 must round UP: 1000 neurons on 256-neuron cores need 4
+    cores — floor division reported 3, silently dropping 232 neurons from
+    feasibility/traffic numbers."""
+    p = mm.RoutingParams(n=1000, f=64, c=256, m=8)
+    assert p.n_clusters == 4
+    assert p.n_clusters * p.c >= p.n  # every neuron is hosted
+    assert mm.RoutingParams(n=1024, f=64, c=256, m=8).n_clusters == 4  # exact
+    assert mm.RoutingParams(n=100, f=64, c=256, m=8).n_clusters == 1  # sub-core
+
+
 def test_sram_cam_split_matches_prototype():
     p = mm.paper_prototype_params()
     assert p.k == 256 and p.n_clusters == 4

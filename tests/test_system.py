@@ -34,6 +34,22 @@ def test_serve_engine_generates_greedy_deterministic():
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
 
 
+def test_serve_engine_rejects_kv_cache_overrun():
+    """prompt + max_new past max_len used to wrap the ring-buffer KV cache
+    and clobber the oldest entries without error."""
+    import pytest
+
+    cfg = get_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_len=16))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(prompts, 5)
+    assert eng.generate(prompts, 4).shape == (1, 4)  # exactly filling is fine
+    assert eng.generate(prompts, 0).shape == (1, 0)  # 0 new tokens, not 1
+
+
 def test_serve_matches_teacher_forced_forward():
     """Greedy generation replayed through the full forward gives the same
     argmax at every step (serving path == training path semantics)."""
