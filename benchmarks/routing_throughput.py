@@ -18,6 +18,12 @@ Rows (DESIGN.md §10):
   * ``table4_measured_hops_*``   — mean mesh hops measured from simulated
                                    traffic, hierarchical vs flat placement
                                    (the empirical Table IV reproduction)
+  * ``compiler_*``               — routing compiler v2 (DESIGN.md §13):
+                                   traffic-aware placement vs the
+                                   hierarchical-linear default on the
+                                   Table-IV geometry — measured mean mesh
+                                   hops, link-FIFO drops, fabric-mode
+                                   sessions/s, and the tag-reuse saving
 
 ``BENCH_SMOKE=1`` shrinks geometry and iteration counts for CI smoke runs.
 """
@@ -224,7 +230,9 @@ def run() -> list[tuple[str, float, str]]:
         e = EventEngine(tables, fabric=fab)
         state, spikes, inflight = e.init_state()
         carry = (state, jnp.ones_like(spikes), inflight)  # every source emits
-        _, (_, stats) = e.step(carry, jnp.zeros((n_cores, k_f)))
+        _, (_, stats) = e.step(
+            carry, jnp.zeros((tables.n_clusters, tables.k_tags))
+        )
         return float(stats.hops) / float(stats.delivered)
 
     mh = _mean_hops(tables_h, hier)
@@ -233,4 +241,74 @@ def run() -> list[tuple[str, float, str]]:
     out.append(
         ("table4_measured_hops_flat", 0.0, f"{mf:.2f}_{mf / mh:.2f}x_vs_hier")
     )
+
+    # routing compiler v2 (DESIGN.md §13): traffic-aware placement vs the
+    # hierarchical-linear default on the Table-IV geometry. The workload is
+    # shuffle traffic (cluster c fans into cluster perm(c)) — structured
+    # communication the linear map scatters across the mesh, the regime
+    # Appendix A's clustered placement targets.
+    from repro.core.compiler import compile_network_v2
+    from repro.core.tags import NetworkSpec as _Spec
+
+    grid_c = 2 if SMOKE else 4
+    fab_c = Fabric(grid_x=grid_c, grid_y=grid_c, cores_per_tile=4)
+    nc_c, cl_c, k_c = fab_c.n_cores, (4 if SMOKE else 8), 64
+
+    def _compiler_net():
+        rng = np.random.default_rng(17)
+        perm = rng.permutation(nc_c)
+        spec = _Spec(n_neurons=nc_c * cl_c, cluster_size=cl_c, k_tags=k_c)
+        fan = min(4, cl_c)
+        for s in range(spec.n_neurons):
+            dst_cl = int(perm[s // cl_c])
+            # two connect-groups per source into the same destination cluster
+            # (e.g. an excitatory and a modulatory projection): v1 burns two
+            # tags + two SRAM entries per source, v2's conflict-graph pass
+            # shares one
+            for syn in (0, int(1 + rng.integers(3))):
+                dsts = dst_cl * cl_c + rng.choice(cl_c, size=fan, replace=False)
+                spec.connect_one_to_many(s, [int(d) for d in dsts], syn)
+        return spec
+
+    spec_c = _compiler_net()
+    tables_def = compile_network(spec_c, fabric=fab_c)  # v1 + linear default
+    res_opt = compile_network_v2(spec_c, fabric=fab_c, seed=0)
+    rep = res_opt.report
+    out.append(
+        ("compiler_tags", 0.0,
+         f"v2_{int(rep.tags_used.sum())}_vs_v1_{int(rep.tags_v1.sum())}")
+    )
+    hops_def = _mean_hops(tables_def, fab_c)
+    hops_opt = _mean_hops(res_opt.tables, fab_c)
+    out.append(("compiler_hops_default", 0.0, f"{hops_def:.2f}"))
+    out.append(
+        ("compiler_hops_optimized", 0.0,
+         f"{hops_opt:.2f}_{hops_def / max(hops_opt, 1e-9):.2f}x_fewer")
+    )
+
+    # link-FIFO drops under capacity-1 links, all sources spiking once
+    def _link_drops(tables):
+        e = EventEngine(tables, fabric=fab_c,
+                        fabric_options={"link_capacity": 1})
+        state, spikes, inflight = e.init_state()
+        carry = (state, jnp.ones_like(spikes), inflight)
+        _, (_, stats) = e.step(carry, jnp.zeros((nc_c, k_c)))
+        return int(np.asarray(stats.link_dropped))
+
+    ld_def, ld_opt = _link_drops(tables_def), _link_drops(res_opt.tables)
+    out.append(("compiler_linkdrops_default", 0.0, f"{ld_def}"))
+    out.append(("compiler_linkdrops_optimized", 0.0, f"{ld_opt}"))
+
+    # fabric-mode serving rate: B concurrent sessions x T steps per run
+    b_s, t_s = (2, 4) if SMOKE else (8, 16)
+    inp_s = jnp.zeros((t_s, b_s, nc_c, k_c)).at[:, :, :, :4].set(2.0)
+    for label, tables in (("default", tables_def), ("optimized", res_opt.tables)):
+        e = EventEngine(tables, fabric=fab_c, queue_capacity=tables.n_neurons)
+        run_s = jax.jit(lambda cr, it, e=e: e.run(cr, it))
+        dt_us, _ = _time_loop(run_s, e.init_state(batch=b_s), inp_s,
+                              iters=max(2, n_iter_b // 2))
+        out.append(
+            (f"compiler_sessions_s_{label}", dt_us,
+             f"{b_s / (dt_us / 1e6):.0f}sessions_s")
+        )
     return out

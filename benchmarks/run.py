@@ -3,6 +3,9 @@
   Table II  -> routing_throughput   Table III + Fig 11 -> energy
   Table IV  -> comparison           Table V + Fig 12   -> cnn_poker
   Fig 13 + §II headline -> memory_scaling
+  compiler v2 placement/tag-reuse (DESIGN.md §13) -> routing_throughput
+  (``compiler_*`` rows: measured mean hops + link drops + sessions/s,
+  optimized vs default placement, and the v2-vs-v1 tag spend)
   beyond-paper (MoE dispatch mapping) -> dispatch
   beyond-paper (multi-tenant AER serving, DESIGN.md §12) -> serving
   §Roofline artifacts -> roofline

@@ -54,7 +54,9 @@ def main():
 
     # ---- offline Hebbian readout tuning (paper §V): find the 64 pool
     # neurons most selective for each class, wire them to its population ----
-    cc0 = compile_poker_cnn()
+    # compiler v2 (DESIGN.md §13): conflict-graph tag reuse — bit-exact vs
+    # the greedy baseline, fewer tags whenever source sets repeat
+    cc0 = compile_poker_cnn(allocator="reuse")
     eng0 = EventEngine(cc0.tables, params)
     print(f"Table-V network: {cc0.tables.n_neurons} neurons on {cc0.tables.n_clusters} cores")
     # all 4 classes x 3 presentations = 12 streams in ONE batched run
@@ -66,8 +68,12 @@ def main():
           [int((fc_select[c] // 64 == c).sum()) for c in range(4)],
           "(from own feature map)")
 
-    cc = compile_poker_cnn(CnnConfig(), fc_select=fc_select)
+    cc = compile_poker_cnn(
+        CnnConfig(), fc_select=fc_select, allocator="reuse", with_report=True
+    )
     eng = EventEngine(cc.tables, params)
+    print("\ncompiler v2 report (Table-V CNN):")
+    print("  " + cc.report.summary().replace("\n", "\n  "), "\n")
 
     # ---- evaluation on fresh event streams --------------------------------
     t_steps, trials = 40, 5

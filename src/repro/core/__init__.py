@@ -4,6 +4,8 @@ Public surface of the paper's contribution:
 
 - ``memory_model``: §II equations (memory-optimal routing design points)
 - ``tags``: network compiler -> distributed SRAM/CAM routing tables
+- ``compiler``: routing compiler v2 — conflict-graph tag reuse,
+  traffic-aware placement, CompileReport (§13)
 - ``two_stage``: executable stage-1 scatter + stage-2 CAM match (JAX)
 - ``dispatch``: pluggable batched dispatch backends (reference/pallas/sharded)
 - ``neuron``: AdExp-I&F + 4-type DPI synapse dynamics
@@ -16,6 +18,7 @@ Public surface of the paper's contribution:
 
 from repro.core import (
     cnn,
+    compiler,
     dispatch,
     event_engine,
     memory_model,
@@ -28,6 +31,7 @@ from repro.core import (
 
 __all__ = [
     "cnn",
+    "compiler",
     "dispatch",
     "event_engine",
     "memory_model",

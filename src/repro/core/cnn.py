@@ -89,6 +89,11 @@ class CompiledCnn:
     pool: tuple[int, int]
     out: tuple[int, int]
     conv_clusters: tuple[int, ...]
+    # compiler-v2 occupancy report (core/compiler.py), built after the
+    # input-tap splice so cam_fill counts the pixel subscriptions too.
+    # tags_used counts routed (SRAM-emitted) tags only — pixel tags are
+    # external input addresses, not allocator spend.
+    report: "object | None" = None
 
     def input_activity(self, events_yx, on_invalid: str = "raise") -> np.ndarray:
         """DVS events -> external tag activity.
@@ -191,12 +196,23 @@ def hebbian_readout_select(
     )
 
 
-def compile_poker_cnn(cfg: CnnConfig = CnnConfig(), fc_select: np.ndarray | None = None):
+def compile_poker_cnn(
+    cfg: CnnConfig = CnnConfig(),
+    fc_select: np.ndarray | None = None,
+    allocator: str = "greedy",
+    with_report: bool = False,
+):
     """Build + compile the Table-V network.
 
     ``fc_select``: [n_classes, <=64] pool-neuron indices feeding each class
     population (the offline-Hebbian selection). Default: class c reads its own
     feature map's 64 pool neurons.
+
+    ``allocator`` selects the tag allocator (``"greedy"`` = v1 baseline,
+    ``"reuse"`` = compiler-v2 conflict-graph tag sharing — bit-exact, and
+    strictly fewer tags whenever the Hebbian selection picks one pool neuron
+    for several classes). ``with_report=True`` attaches the v2
+    ``CompileReport`` measured on the final (input-spliced) tables.
     """
     c = cfg
     n_conv = c.n_kernels * c.conv_hw * c.conv_hw  # 1024
@@ -251,7 +267,7 @@ def compile_poker_cnn(cfg: CnnConfig = CnnConfig(), fc_select: np.ndarray | None
             spec.connect_group([pool0 + int(p)], tgts, shared_tag=True)
 
 
-    tables = compile_network(spec)
+    tables = compile_network(spec, allocator=allocator)
 
     # ---- input -> conv: splice pixel-id tags into conv CAMs ---------------
     # (input pixels are external sources — they occupy tag space, not SRAM)
@@ -289,6 +305,12 @@ def compile_poker_cnn(cfg: CnnConfig = CnnConfig(), fc_select: np.ndarray | None
                     cam_syn[neuron, slot] = syn
     tables = dataclasses.replace(tables, cam_tag=cam_tag, cam_syn=cam_syn)
 
+    report = None
+    if with_report:
+        from repro.core.compiler import build_report
+
+        report = build_report(spec, tables)
+
     return CompiledCnn(
         tables=tables,
         cfg=c,
@@ -296,4 +318,5 @@ def compile_poker_cnn(cfg: CnnConfig = CnnConfig(), fc_select: np.ndarray | None
         pool=(pool0, pool0 + n_pool),
         out=(out0, out0 + n_out),
         conv_clusters=conv_clusters,
+        report=report,
     )

@@ -1,0 +1,496 @@
+"""Routing compiler v2: tag-reuse allocation + traffic-aware placement.
+
+The paper's Appendix A argues two optimizations make two-stage tag routing
+deployable: *tag re-assignment* (reusing the per-cluster tag space so K stays
+bounded) and *clustered placement* (keeping traffic below the R3 mesh —
+Table IV's ~2.1x mean-hop advantage). The v1 compiler (core/tags.py) does
+neither: it burns a fresh tag per allocation unit until K is exhausted and
+places clusters linearly. This module adds both, plus a compile report, while
+staying **bit-exact**: a network compiled with v2 realizes the identical
+dense connectivity (multiset of (src, dst, syn) connections, multiplicity
+included) and delivers the identical spike-by-spike trajectory whenever no
+events are dropped (the property-based conformance suite in
+tests/test_compiler.py locks this against the dense oracle). Two capacity
+caveats are inherent to doing *less* work: the AER output queue compacts
+active sources — not SRAM entries — so queue-overflow drops are identical
+under v1 and v2 tables; inter-tile link FIFOs, however, count routed
+entries, and a reuse-merged source emits fewer of them, so under finite
+link capacity v2 presents strictly less load and the surviving-event set
+(always the lowest-source-id prefix per link) can differ from v1's.
+
+Tag-reuse allocation (DESIGN.md §13)
+------------------------------------
+Broadcast semantics make most tag sharing unsound: an event (tag t, cluster
+c) reaches *every* CAM word matching t in c, so merging two units' tags
+cross-wires their sources into each other's audiences. The only merge that
+is exact is between units with **identical source sets**: each shared source
+then emits ONE event where it used to emit several, and the destination's
+(unchanged, separately kept) CAM words still fire exactly the same multiset
+of pulses. We therefore build, per cluster, a conflict graph whose vertices
+are allocation units and whose edges join units with *different* source sets
+(merging them would create cross-talk), and greedily color it — same color =
+same tag. Because "identical source set" is an equivalence relation the
+conflict graph is a disjoint union of cliques-complement, so greedy coloring
+is exactly optimal for this compatibility relation: tags per cluster =
+number of distinct source sets, always <= v1's unit count, and SRAM entries
+(deduped per (source, tag, cluster)) and CAM words never exceed v1's.
+
+Traffic-aware placement
+-----------------------
+``optimize_placement`` minimizes expected hop-weighted mesh traffic
+``sum_{a,b} T[a,b] * H[tile(a), tile(b)]`` (T from per-neuron rates x SRAM
+entries, H the XY-mesh hop matrix of routing.tile_hop_matrix) over
+cluster->tile maps subject to ``validate_placement`` capacity, via simulated
+annealing over pairwise swaps/relocations with a greedy-refinement finish,
+seeded from the hierarchical-linear default — a classic QAP local search
+with O(n_clusters) incremental cost deltas. ``device_slabs`` restricts moves
+so each tile's clusters stay inside one contiguous cluster slab, which is
+exactly the constraint the sharded fabric step (tiles -> devices,
+DESIGN.md §11) enforces — optimized placements then run multi-device as-is.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.tags import (
+    AllocUnit,
+    NetworkSpec,
+    RoutingTables,
+    compile_network,
+    expand_units,
+)
+
+__all__ = [
+    "CompileReport",
+    "CompileResult",
+    "allocate_tags_reuse",
+    "traffic_matrix",
+    "placement_cost",
+    "optimize_placement",
+    "build_report",
+    "compile_network_v2",
+]
+
+
+# ---------------------------------------------------------------------------
+# tag-reuse allocation: conflict-graph coloring
+# ---------------------------------------------------------------------------
+def allocate_tags_reuse(spec: NetworkSpec, units: list[AllocUnit]):
+    """Color each cluster's unit conflict graph: ``(tags, tags_used)``.
+
+    Two units conflict (must take different tags) unless their source sets
+    are identical — the only bit-exact merge under broadcast semantics (see
+    module docstring). Greedy first-fit coloring in unit order; since the
+    no-conflict relation is an equivalence, first-fit is optimal: each
+    distinct (cluster, source-set) key gets the next free tag of its
+    cluster, and later units with the same key reuse it. Raises the v2
+    tag-overflow diagnostic naming the cluster and the binding constraint.
+    """
+    tags: list[int] = []
+    tags_used = np.zeros(spec.n_clusters, dtype=np.int64)
+    color_of_key: dict[tuple[int, tuple[int, ...]], int] = {}
+    for u in units:
+        key = (u.cluster, u.sources)
+        color = color_of_key.get(key)
+        if color is None:
+            color = int(tags_used[u.cluster])
+            if color >= spec.k_tags:
+                raise ValueError(
+                    f"tag overflow in cluster {u.cluster}: K={spec.k_tags} "
+                    f"exhausted even with tag reuse — the cluster's CAM "
+                    f"audience needs {color + 1}+ distinct source sets "
+                    "(binding constraint: tags per cluster); increase alpha "
+                    "(more tags) or re-cluster the network (Appendix A)"
+                )
+            tags_used[u.cluster] += 1
+            color_of_key[key] = color
+        tags.append(color)
+    return tags, tags_used
+
+
+# ---------------------------------------------------------------------------
+# traffic model + placement optimization
+# ---------------------------------------------------------------------------
+def traffic_matrix(
+    tables: RoutingTables, rates: np.ndarray | Sequence[float] | None = None
+) -> np.ndarray:
+    """Expected inter-cluster event traffic ``T[src_cluster, dst_cluster]``.
+
+    Every occupied SRAM entry of neuron ``s`` is one AER event per spike of
+    ``s``, so the expected events/s from cluster a to cluster b is the sum of
+    ``rates[s]`` over entries ``(s -> b)`` with ``s`` in ``a``. ``rates``
+    defaults to uniform (1.0 per neuron) — the placement objective then
+    weights every SRAM entry equally, matching the fabric stats' per-entry
+    hop accounting under all-sources-spiking traffic.
+    """
+    src_tag = np.asarray(tables.src_tag)
+    src_dest = np.asarray(tables.src_dest)
+    n = tables.n_neurons
+    if rates is None:
+        rates = np.ones(n, dtype=np.float64)
+    else:
+        rates = np.asarray(rates, dtype=np.float64)
+        if rates.shape != (n,):
+            raise ValueError(f"rates has shape {rates.shape}, expected ({n},)")
+    src, ent = np.nonzero(src_tag >= 0)
+    t = np.zeros((tables.n_clusters, tables.n_clusters), dtype=np.float64)
+    np.add.at(t, (src // tables.cluster_size, src_dest[src, ent]), rates[src])
+    return t
+
+
+def placement_cost(
+    traffic: np.ndarray, hop_matrix: np.ndarray, placement: np.ndarray
+) -> float:
+    """Hop-weighted traffic ``sum_{a,b} T[a,b] * H[p[a], p[b]]``."""
+    p = np.asarray(placement)
+    return float((traffic * hop_matrix[p[:, None], p[None, :]]).sum())
+
+
+def _swap_delta(s, h, p, i, j):
+    """Cost change of swapping the tiles of clusters i and j (O(n_clusters)).
+
+    ``s`` is the symmetrized traffic ``T + T.T`` so one row per cluster
+    carries both directions; the k=i / k=j self terms are excluded (their
+    hop contribution is invariant under the swap because H is symmetric)."""
+    hpi, hpj = h[p[i]][p], h[p[j]][p]
+    v = hpj - hpi
+    delta = float((s[i] - s[j]) @ v)
+    delta -= float((s[i, i] - s[j, i]) * v[i] + (s[i, j] - s[j, j]) * v[j])
+    return delta
+
+
+def _move_delta(s, h, p, i, t):
+    """Cost change of relocating cluster i to tile t (O(n_clusters)).
+
+    The self term needs care: after the move, cluster i's own-traffic hop
+    count is H[t, t] = 0 (it moved *with* itself), not H[t, p_old[i]]."""
+    d = float(s[i] @ (h[t][p] - h[p[i]][p]))
+    return d - float(s[i, i] * h[t][p[i]])
+
+
+def optimize_placement(
+    traffic: np.ndarray,
+    fabric,
+    *,
+    init: np.ndarray | None = None,
+    seed: int = 0,
+    anneal_steps: int | None = None,
+    device_slabs: int | None = None,
+) -> tuple[np.ndarray, dict]:
+    """Traffic-aware cluster->tile placement (simulated annealing + greedy).
+
+    Minimizes :func:`placement_cost` subject to the fabric's per-tile core
+    capacity, starting from ``init`` (default: the hierarchical linear
+    placement). Returns ``(placement, info)`` where ``info`` records the
+    initial/final cost and predicted mean hops per delivered event.
+
+    ``device_slabs=g`` restricts the search to placements where every tile's
+    clusters lie inside one of ``g`` equal contiguous cluster slabs — the
+    invariant ``EventEngine.make_sharded_step`` requires to map tiles onto
+    ``g`` devices — by only swapping within a slab and relocating to tiles
+    currently owned by the same slab (or empty). The seed placement must
+    already satisfy it (the hierarchical linear default does whenever slabs
+    align with whole tiles).
+
+    Deterministic for a given ``seed``; annealing proposes random pairwise
+    swaps (and relocations when tiles have spare capacity) with O(n_clusters)
+    incremental deltas, then a greedy all-pairs refinement sweep runs until
+    no improving swap remains.
+    """
+    from repro.core.routing import tile_hop_matrix, validate_placement
+
+    traffic = np.asarray(traffic, dtype=np.float64)
+    nc = traffic.shape[0]
+    if traffic.shape != (nc, nc):
+        raise ValueError(f"traffic must be square, got {traffic.shape}")
+    p = validate_placement(fabric, nc, init).astype(np.int64).copy()
+    h = tile_hop_matrix(fabric).astype(np.float64)
+    s = traffic + traffic.T
+    cost0 = placement_cost(traffic, h, p)
+    total = float(traffic.sum())
+    info = {
+        "cost_init": cost0,
+        "mean_hops_init": cost0 / total if total else 0.0,
+    }
+
+    slab_of = None
+    if device_slabs is not None:
+        if device_slabs <= 0 or nc % device_slabs:
+            raise ValueError(
+                f"device_slabs={device_slabs} must divide n_clusters={nc}"
+            )
+        slab_of = np.arange(nc) // (nc // device_slabs)
+        tiles_of_slab = [set(p[slab_of == g]) for g in range(device_slabs)]
+        for g in range(device_slabs):
+            for g2 in range(g + 1, device_slabs):
+                shared = tiles_of_slab[g] & tiles_of_slab[g2]
+                if shared:
+                    raise ValueError(
+                        f"seed placement splits tiles {sorted(shared)} across "
+                        f"device slabs {g} and {g2}"
+                    )
+
+    if nc >= 2 and fabric.n_tiles >= 2 and total > 0:
+        rng = np.random.default_rng(seed)
+        tile_count = np.bincount(p, minlength=fabric.n_tiles)
+        # tile -> owning slab (-1 = empty), for the device_slabs constraint
+        tile_owner = np.full(fabric.n_tiles, -1, dtype=np.int64)
+        if slab_of is not None:
+            tile_owner[p] = slab_of  # each tile has one owner by the check above
+        steps = anneal_steps if anneal_steps is not None else 4000 + 250 * nc
+        # temperature from the observed swap-delta scale
+        probe = [
+            abs(_swap_delta(s, h, p, *sorted(rng.choice(nc, 2, replace=False))))
+            for _ in range(min(64, steps))
+        ]
+        t0 = max(1e-9, float(np.median([d for d in probe if d > 0] or [1.0])))
+        t_end = t0 * 1e-3
+        cool = (t_end / t0) ** (1.0 / max(1, steps))
+        temp = t0
+        for _ in range(steps):
+            temp *= cool
+            i = int(rng.integers(nc))
+            spare = tile_count < fabric.cores_per_tile
+            if slab_of is not None:
+                spare &= (tile_owner == -1) | (tile_owner == slab_of[i])
+            do_move = spare.any() and rng.random() < 0.3
+            if do_move:
+                t = int(rng.choice(np.flatnonzero(spare)))
+                if t == p[i]:
+                    continue
+                delta = _move_delta(s, h, p, i, t)
+                if delta < 0 or rng.random() < math.exp(-delta / temp):
+                    tile_count[p[i]] -= 1
+                    if slab_of is not None and tile_count[p[i]] == 0:
+                        tile_owner[p[i]] = -1
+                    p[i] = t
+                    tile_count[t] += 1
+                    if slab_of is not None:
+                        tile_owner[t] = slab_of[i]
+            else:
+                j = int(rng.integers(nc))
+                if i == j or p[i] == p[j]:
+                    continue
+                if slab_of is not None and slab_of[i] != slab_of[j]:
+                    continue
+                delta = _swap_delta(s, h, p, i, j)
+                if delta < 0 or rng.random() < math.exp(-delta / temp):
+                    p[i], p[j] = p[j], p[i]
+        # greedy refinement: all-pairs improving swaps to a local optimum
+        improved = True
+        sweeps = 0
+        while improved and sweeps < 16:
+            improved = False
+            sweeps += 1
+            for i in range(nc):
+                for j in range(i + 1, nc):
+                    if p[i] == p[j]:
+                        continue
+                    if slab_of is not None and slab_of[i] != slab_of[j]:
+                        continue
+                    if _swap_delta(s, h, p, i, j) < -1e-12:
+                        p[i], p[j] = p[j], p[i]
+                        improved = True
+
+    placement = validate_placement(fabric, nc, p.astype(np.int32))
+    cost1 = placement_cost(traffic, h, placement)
+    info["cost_final"] = cost1
+    info["mean_hops_final"] = cost1 / total if total else 0.0
+    return placement, info
+
+
+# ---------------------------------------------------------------------------
+# compile report
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CompileReport:
+    """What the compiler actually spent, vs the paper's analytical model.
+
+    ``tags_used[c]`` counts distinct routed tags per cluster (v2 occupancy);
+    ``tags_v1[c]`` is the greedy baseline (one per allocation unit) for the
+    same spec — the reuse saving is their difference. ``sram_fill[n]`` /
+    ``cam_fill[n]`` are per-neuron occupied entries. ``eq2_bits_per_neuron``
+    evaluates memory_model eq.(2) at the network's empirical fan-out F and
+    broadcast fan-out M (mean CAM audience per SRAM entry);
+    ``measured_bits_per_neuron`` is the occupied-bit count of the emitted
+    tables. ``mean_hops`` is the traffic-weighted predicted mesh hops per
+    delivered event under ``tile_of_cluster`` (None without a fabric).
+    """
+
+    k_tags: int
+    cluster_size: int
+    tags_used: np.ndarray  # [n_clusters] int64
+    tags_v1: np.ndarray  # [n_clusters] int64
+    sram_fill: np.ndarray  # [N] int64
+    cam_fill: np.ndarray  # [N] int64
+    sram_bits: int
+    cam_bits: int
+    eq2_bits_per_neuron: float
+    measured_bits_per_neuron: float
+    mean_hops: float | None = None
+    tile_of_cluster: np.ndarray | None = None
+
+    def summary(self) -> str:
+        lines = [
+            f"clusters={len(self.tags_used)} K={self.k_tags} "
+            f"C={self.cluster_size}",
+            f"tags/cluster: v2 max {int(self.tags_used.max(initial=0))} "
+            f"(v1 greedy would use {int(self.tags_v1.max(initial=0))}), "
+            f"total {int(self.tags_used.sum())} vs {int(self.tags_v1.sum())}",
+            f"SRAM fill: mean {self.sram_fill.mean():.2f} max "
+            f"{int(self.sram_fill.max(initial=0))} entries/neuron "
+            f"({self.sram_bits} bits)",
+            f"CAM fill: mean {self.cam_fill.mean():.2f} max "
+            f"{int(self.cam_fill.max(initial=0))} words/neuron "
+            f"({self.cam_bits} bits)",
+            f"bits/neuron: measured {self.measured_bits_per_neuron:.1f} vs "
+            f"eq.(2) {self.eq2_bits_per_neuron:.1f}",
+        ]
+        if self.mean_hops is not None:
+            lines.append(f"predicted mean mesh hops/event: {self.mean_hops:.2f}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileResult:
+    """Routing tables + the report describing what compiling them cost."""
+
+    tables: RoutingTables
+    report: CompileReport
+
+
+def build_report(
+    spec: NetworkSpec,
+    tables: RoutingTables,
+    fabric=None,
+    rates: np.ndarray | None = None,
+) -> CompileReport:
+    """Measure a compiled network's resource occupancy against the model."""
+    src_tag = np.asarray(tables.src_tag)
+    src_dest = np.asarray(tables.src_dest)
+    cam_tag = np.asarray(tables.cam_tag)
+    n, nc = tables.n_neurons, tables.n_clusters
+
+    # encode (cluster, tag) pairs as flat ints for vectorized set/count ops;
+    # span covers spliced external tags (cnn.py) that may sit past k_tags-1
+    span = int(
+        max(tables.k_tags, src_tag.max(initial=0) + 1, cam_tag.max(initial=0) + 1)
+    )
+    src, ent = np.nonzero(src_tag >= 0)
+    entry_codes = src_dest[src, ent].astype(np.int64) * span + src_tag[src, ent]
+    # per-cluster distinct routed tags (what the allocator actually spent)
+    uniq_entry_codes = np.unique(entry_codes)
+    tags_used = np.bincount(
+        uniq_entry_codes // span, minlength=nc
+    ).astype(np.int64)
+    # v1 greedy baseline: one tag per allocation unit
+    tags_v1 = np.zeros(nc, dtype=np.int64)
+    for u in expand_units(spec):
+        tags_v1[u.cluster] += 1
+
+    sram_fill = (src_tag >= 0).sum(1).astype(np.int64)
+    cam_fill = (cam_tag >= 0).sum(1).astype(np.int64)
+
+    # empirical eq.(2): audience size per routed (cluster, tag) gives the
+    # realized second-stage fan-out M; F is the realized dense fan-out.
+    # Vectorized: count CAM words per (cluster, tag), then gather each SRAM
+    # entry's audience — per ENTRY, not per distinct tag, since every entry
+    # reaches its tag's whole audience (that sum is the dense connection
+    # count)
+    cam_j, cam_s = np.nonzero(cam_tag >= 0)
+    cam_codes = (
+        (cam_j // tables.cluster_size).astype(np.int64) * span
+        + cam_tag[cam_j, cam_s]
+    )
+    aud_codes, aud_counts = np.unique(cam_codes, return_counts=True)
+    pos = np.searchsorted(aud_codes, entry_codes)
+    pos_c = np.clip(pos, 0, max(0, len(aud_codes) - 1))
+    hit = (len(aud_codes) > 0) & (aud_codes[pos_c] == entry_codes)
+    n_entries = int(sram_fill.sum())
+    n_connections = int(np.where(hit, aud_counts[pos_c], 0).sum()) if n_entries else 0
+    eq2 = 0.0
+    if n_entries and n_connections:
+        from repro.core import memory_model as mm
+
+        f_emp = n_connections / n
+        m_emp = n_connections / n_entries  # mean audience per SRAM entry
+        eq2 = mm.mem_total_bits(
+            n=max(2, n), f=f_emp, c=tables.cluster_size, m=m_emp,
+            k=max(2, tables.k_tags),
+        )
+    measured = (tables.sram_bits() + tables.cam_bits()) / n
+
+    mean_hops = None
+    if fabric is not None and tables.tile_of_cluster is not None:
+        from repro.core.routing import tile_hop_matrix
+
+        t = traffic_matrix(tables, rates)
+        h = tile_hop_matrix(fabric).astype(np.float64)
+        total = float(t.sum())
+        if total:
+            mean_hops = placement_cost(t, h, tables.tile_of_cluster) / total
+
+    return CompileReport(
+        k_tags=tables.k_tags,
+        cluster_size=tables.cluster_size,
+        tags_used=tags_used,
+        tags_v1=tags_v1,
+        sram_fill=sram_fill,
+        cam_fill=cam_fill,
+        sram_bits=tables.sram_bits(),
+        cam_bits=tables.cam_bits(),
+        eq2_bits_per_neuron=float(eq2),
+        measured_bits_per_neuron=float(measured),
+        mean_hops=mean_hops,
+        tile_of_cluster=tables.tile_of_cluster,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the v2 front-end
+# ---------------------------------------------------------------------------
+def compile_network_v2(
+    spec: NetworkSpec,
+    fabric=None,
+    tile_of_cluster: np.ndarray | Sequence[int] | None = None,
+    *,
+    allocator: str = "reuse",
+    optimize: bool = True,
+    rates: np.ndarray | None = None,
+    seed: int = 0,
+    anneal_steps: int | None = None,
+    device_slabs: int | None = None,
+) -> CompileResult:
+    """Routing compiler v2: reuse allocation + traffic-aware placement.
+
+    Compiles ``spec`` with the tag-reuse allocator (bit-exact vs v1, never
+    more tags/SRAM/CAM), then — when a ``fabric`` is given and no explicit
+    ``tile_of_cluster`` pins the layout — optimizes the cluster->tile
+    placement against the network's expected traffic (``rates`` per neuron,
+    default uniform) with :func:`optimize_placement`. Returns the stamped
+    :class:`RoutingTables` plus a :class:`CompileReport`.
+    """
+    tables = compile_network(spec, allocator=allocator)
+    if tile_of_cluster is not None and fabric is None:
+        raise ValueError("tile_of_cluster requires a fabric to validate against")
+    if fabric is not None:
+        from repro.core.routing import validate_placement
+
+        if tile_of_cluster is not None or not optimize:
+            placement = validate_placement(fabric, spec.n_clusters, tile_of_cluster)
+        else:
+            placement, _ = optimize_placement(
+                traffic_matrix(tables, rates),
+                fabric,
+                seed=seed,
+                anneal_steps=anneal_steps,
+                device_slabs=device_slabs,
+            )
+        tables = dataclasses.replace(tables, tile_of_cluster=placement)
+    report = build_report(spec, tables, fabric=fabric, rates=rates)
+    return CompileResult(tables=tables, report=report)

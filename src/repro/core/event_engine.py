@@ -123,6 +123,11 @@ class EventEngine:
         fabric=None,  # routing.Fabric | dispatch.FabricBackend | None
         fabric_options: dict | None = None,
     ):
+        # a compiler-v2 CompileResult (core/compiler.py) carries the tables
+        # plus a CompileReport; unwrap it so optimized placements flow
+        # end-to-end without the caller re-plumbing
+        if not isinstance(tables, RoutingTables) and hasattr(tables, "tables"):
+            tables = tables.tables
         self.params = params or NeuronParams()
         self.cluster_size = tables.cluster_size
         self.k_tags = tables.k_tags

@@ -36,6 +36,7 @@ __all__ = [
     "mem_total_bits",
     "mem_total_bits_alpha",
     "optimal_m",
+    "optimal_m_integer",
     "mem_at_optimal_m",
     "conventional_bits",
     "feasible",
@@ -100,6 +101,23 @@ def mem_total_bits_alpha(n: float, f: float, c: float, m: float, alpha: float = 
 def optimal_m(n: float, f: float, c: float, alpha: float = 1.0) -> float:
     """Eq. (5): M* = sqrt(F log2(alpha N) / (alpha log2(alpha C)))."""
     return math.sqrt(f * math.log2(alpha * n) / (alpha * math.log2(alpha * c)))
+
+
+def optimal_m_integer(n: float, f: float, c: float, alpha: float = 1.0) -> int:
+    """Integer argmin of eq.(3) over the feasible M in [1, min(F, C)].
+
+    Eq.(5)'s M* is real-valued; hardware picks an integer second-stage
+    fan-out. Eq.(3) is strictly convex in M (a/M + b*M with a, b > 0), so
+    the integer optimum is one of floor(M*)/ceil(M*) clamped into range —
+    checked explicitly so the property test can compare against brute force.
+    """
+    hi = max(1, int(min(f, c)))
+    m_star = optimal_m(n, f, c, alpha)
+    candidates = {1, hi}
+    for m in (math.floor(m_star), math.ceil(m_star)):
+        if 1 <= m <= hi:
+            candidates.add(int(m))
+    return min(candidates, key=lambda m: (mem_total_bits_alpha(n, f, c, m, alpha), m))
 
 
 def mem_at_optimal_m(n: float, f: float, c: float, alpha: float = 1.0) -> float:

@@ -24,6 +24,7 @@ __all__ = [
     "FabricDeliveryModel",
     "build_delivery_model",
     "default_tile_of_cluster",
+    "tile_hop_matrix",
     "validate_placement",
     "avg_distance_hierarchical",
     "avg_distance_mesh",
@@ -208,6 +209,22 @@ def default_tile_of_cluster(n_clusters: int, fabric: Fabric) -> np.ndarray:
     )
 
 
+def tile_hop_matrix(fabric: Fabric) -> np.ndarray:
+    """[n_tiles, n_tiles] int32 XY-Manhattan R3 hops between linear tile ids.
+
+    The single definition of mesh distance shared by
+    :func:`build_delivery_model` (per-cluster-pair delay/latency tables) and
+    the traffic-aware placement optimizer (core/compiler.py), so the
+    optimizer's objective and the executable fabric can never disagree on
+    what a hop is.
+    """
+    t = np.arange(fabric.n_tiles, dtype=np.int32)
+    tx, ty = t % fabric.grid_x, t // fabric.grid_x
+    return (
+        np.abs(tx[:, None] - tx[None, :]) + np.abs(ty[:, None] - ty[None, :])
+    ).astype(np.int32)
+
+
 def validate_placement(
     fabric: Fabric, n_clusters: int, tile_of_cluster: np.ndarray | None
 ) -> np.ndarray:
@@ -287,10 +304,7 @@ def build_delivery_model(
         raise ValueError(f"dt must be positive, got {dt}")
     tiles = validate_placement(fabric, n_clusters, tile_of_cluster)
     c = fabric.constants
-    tx = tiles % fabric.grid_x
-    ty = tiles // fabric.grid_x
-    hops = np.abs(tx[:, None] - tx[None, :]) + np.abs(ty[:, None] - ty[None, :])
-    hops = hops.astype(np.int32)
+    hops = tile_hop_matrix(fabric)[tiles[:, None], tiles[None, :]]
     same_core = np.eye(n_clusters, dtype=bool)
     # vectorized Fabric.latency_s / Fabric.energy_j (r1/r2 follow same_core)
     r1 = np.where(same_core, 1, 2)

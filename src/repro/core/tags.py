@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
+from itertools import groupby
 from typing import TYPE_CHECKING, Iterable, Sequence
 
 import numpy as np
@@ -35,7 +36,14 @@ import numpy as np
 if TYPE_CHECKING:  # placement typing only; no import cycle at runtime
     from repro.core.routing import Fabric
 
-__all__ = ["SynapseType", "NetworkSpec", "RoutingTables", "compile_network"]
+__all__ = [
+    "SynapseType",
+    "NetworkSpec",
+    "RoutingTables",
+    "AllocUnit",
+    "expand_units",
+    "compile_network",
+]
 
 
 class SynapseType:
@@ -176,12 +184,99 @@ class RoutingTables:
         return np.asarray(sorted(rows), dtype=np.int32).reshape(-1, 3)
 
 
+@dataclasses.dataclass(frozen=True)
+class AllocUnit:
+    """One tag-allocation unit: a (connect-group, destination-cluster) pair.
+
+    ``shared_tag=False`` groups expand into one unit per source (each source
+    gets its own tag in v1), ``shared_tag=True`` groups into one unit per
+    destination cluster. A unit is the atom both allocators reason about:
+    v1 ("greedy") spends one fresh tag per unit; v2 ("reuse",
+    core/compiler.py) lets units with *identical source sets* share a tag —
+    the only merge that is bit-exact under broadcast semantics (DESIGN.md
+    §13).
+    """
+
+    cluster: int  # destination cluster the tag lives in
+    sources: tuple[int, ...]  # sorted, non-empty source neuron ids
+    targets: tuple[tuple[int, int], ...]  # (dst neuron, syn type)
+    copies: int  # CAM words per (target, tag) — integer weight
+    group: int = 0  # originating connect-group index (CAM materialization
+    # batches a group-cluster's units so word order matches pre-unit v1)
+
+
+def expand_units(spec: NetworkSpec) -> list[AllocUnit]:
+    """Expand the spec's connect-groups into allocation units, in the exact
+    order v1 allocates tags (group order, then cluster id, then source id) —
+    unit index therefore reproduces v1's tag numbering per cluster. Units of
+    one (group, cluster) are emitted consecutively."""
+    units: list[AllocUnit] = []
+    for g, (srcs, by_cluster, shared, copies) in enumerate(spec._groups):
+        if not srcs:
+            # an empty source set sends nothing: allocating here (the shared
+            # branch used to) burns one tag per destination cluster that no
+            # SRAM entry emits and no CAM word needs
+            continue
+        for cluster, tgts in sorted(by_cluster.items()):
+            tgts_t = tuple((int(d), int(sy)) for d, sy in tgts)
+            if shared:
+                units.append(AllocUnit(cluster, srcs, tgts_t, copies, g))
+            else:
+                units.extend(
+                    AllocUnit(cluster, (s,), tgts_t, copies, g) for s in srcs
+                )
+    return units
+
+
+def _allocate_unit_tags(spec: NetworkSpec, units: list[AllocUnit], allocator: str):
+    """Assign a tag to every unit: ``(tags, tags_used_per_cluster)``.
+
+    ``"greedy"`` (v1) burns one fresh tag per unit. ``"reuse"`` (v2) colors
+    the per-cluster conflict graph so same-source-set units share a tag
+    (core/compiler.py).
+    """
+    if allocator == "reuse":
+        from repro.core.compiler import allocate_tags_reuse
+
+        return allocate_tags_reuse(spec, units)
+    if allocator != "greedy":
+        raise ValueError(
+            f"unknown allocator {allocator!r}; available: 'greedy' (v1, one "
+            "tag per unit), 'reuse' (v2 conflict-graph tag sharing)"
+        )
+    next_tag = np.zeros(spec.n_clusters, dtype=np.int64)
+    tags = []
+    for u in units:
+        t = int(next_tag[u.cluster])
+        if t >= spec.k_tags:
+            raise ValueError(
+                f"tag overflow in cluster {u.cluster}: K={spec.k_tags} "
+                f"exhausted (binding constraint: tags per cluster); "
+                "increase alpha (more tags), re-cluster the network "
+                "(Appendix A), or compile with allocator='reuse' to share "
+                "tags between same-source connect-groups"
+            )
+        next_tag[u.cluster] += 1
+        tags.append(t)
+    return tags, next_tag.astype(np.int64)
+
+
 def compile_network(
     spec: NetworkSpec,
     fabric: "Fabric | None" = None,
     tile_of_cluster: np.ndarray | Sequence[int] | None = None,
+    allocator: str = "greedy",
 ) -> RoutingTables:
-    """Greedy tag allocation (paper Appendix A: 'tag re-assignment').
+    """Tag allocation + table materialization (paper Appendix A).
+
+    ``allocator`` selects the tag-assignment strategy: ``"greedy"`` (v1,
+    the paper's baseline — a fresh tag per allocation unit, overflow is a
+    compile error) or ``"reuse"`` (v2 — conflict-graph coloring that lets
+    units with identical source sets share one tag, bit-exact by
+    construction; see core/compiler.py and DESIGN.md §13). The routing
+    compiler v2 front-end :func:`repro.core.compiler.compile_network_v2`
+    adds traffic-aware placement and a :class:`~repro.core.compiler.CompileReport`
+    on top of this function.
 
     With ``fabric`` set the tables additionally carry a cluster->tile
     placement (``tile_of_cluster``, validated against the fabric geometry;
@@ -196,57 +291,49 @@ def compile_network(
 
         placement = validate_placement(fabric, spec.n_clusters, tile_of_cluster)
     n = spec.n_neurons
+    units = expand_units(spec)
+    unit_tags, _ = _allocate_unit_tags(spec, units, allocator)
+
     src_entries: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # (tag, cluster)
     cam_entries: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # (tag, syn)
-    next_tag = np.zeros(spec.n_clusters, dtype=np.int64)
-
-    def alloc_tag(cluster: int) -> int:
-        t = int(next_tag[cluster])
-        if t >= spec.k_tags:
-            raise ValueError(
-                f"tag overflow in cluster {cluster}: K={spec.k_tags} exhausted; "
-                "increase alpha (more tags) or re-cluster the network (Appendix A)"
-            )
-        next_tag[cluster] += 1
-        return t
-
-    for srcs, by_cluster, shared, copies in spec._groups:
-        if not srcs:
-            # an empty source set sends nothing: allocating here (the shared
-            # branch used to) burns one tag per destination cluster that no
-            # SRAM entry emits and no CAM word needs
-            continue
-        for cluster, tgts in sorted(by_cluster.items()):
-            if shared:
-                tags_for_src = {s: None for s in srcs}
-                tag = alloc_tag(cluster)
-                for s in srcs:
-                    tags_for_src[s] = tag
-            else:
-                tags_for_src = {s: alloc_tag(cluster) for s in srcs}
-            # stage-1 entries (dedupe per (src, cluster, tag))
-            for s in srcs:
-                entry = (tags_for_src[s], cluster)
+    # materialize per (group, cluster) run — expand_units emits those
+    # consecutively — so CAM word order stays target-outer / tag-inner,
+    # bit-identical to the pre-unit v1 layout (a multi-source non-shared
+    # group writes each target's words for ALL its tags contiguously)
+    for _, run_iter in groupby(
+        zip(units, unit_tags), key=lambda ut: (ut[0].group, ut[0].cluster)
+    ):
+        run = list(run_iter)
+        # stage-1 entries (dedupe per (src, cluster, tag) — units sharing a
+        # tag collapse to one SRAM entry per source, the v2 memory win)
+        for u, tag in run:
+            for s in u.sources:
+                entry = (tag, u.cluster)
                 if entry not in src_entries[s]:
                     src_entries[s].append(entry)
                     if len(src_entries[s]) > spec.max_sram_entries:
                         raise ValueError(
-                            f"source {s}: stage-1 fan-out exceeds F/M="
-                            f"{spec.max_sram_entries} SRAM entries"
+                            f"source {s} (cluster {spec.cluster_of(s)}): "
+                            f"stage-1 fan-out exceeds F/M="
+                            f"{spec.max_sram_entries} SRAM entries while "
+                            f"adding its entry for cluster {u.cluster} "
+                            f"(binding constraint: max_sram_entries)"
                         )
-            # stage-2 subscriptions
-            if shared:
-                uniq_tags = sorted(set(tags_for_src.values()))
-            else:
-                uniq_tags = sorted(tags_for_src.values())
-            for dst, syn in tgts:
-                for t in uniq_tags:
-                    for _ in range(copies):
-                        cam_entries[dst].append((t, syn))
-                    if len(cam_entries[dst]) > spec.max_cam_words:
-                        raise ValueError(
-                            f"neuron {dst}: CAM capacity {spec.max_cam_words} exceeded"
-                        )
+        # stage-2 subscriptions: one group-cluster's units share a target
+        # list; each target subscribes to every unit tag, sorted
+        u0 = run[0][0]
+        run_tags = sorted(tag for _, tag in run)
+        for dst, syn in u0.targets:
+            for tag in run_tags:
+                for _ in range(u0.copies):
+                    cam_entries[dst].append((tag, syn))
+                if len(cam_entries[dst]) > spec.max_cam_words:
+                    raise ValueError(
+                        f"neuron {dst} (cluster {spec.cluster_of(dst)}): CAM "
+                        f"capacity {spec.max_cam_words} exceeded while "
+                        f"subscribing to tag {tag} (binding constraint: "
+                        f"max_cam_words)"
+                    )
 
     e, s_ = spec.max_sram_entries, spec.max_cam_words
     src_tag = np.full((n, e), -1, dtype=np.int32)

@@ -393,6 +393,125 @@ def test_fabric_sharded_step_matches_local():
         state, prev, inflight = st_l, sp_l, inf_l
 
 
+
+# ---------------------------------------------------------------------------
+# determinism regression: event order must not matter
+# ---------------------------------------------------------------------------
+def _edges_for_determinism(rng, n=32, edges=70):
+    seen, out = set(), []
+    while len(out) < edges:
+        s, d = int(rng.integers(n)), int(rng.integers(n))
+        if (s, d) in seen:
+            continue
+        seen.add((s, d))
+        out.append((s, d, int(rng.integers(4))))
+    return out
+
+
+def _spec_from_edges(edges, n=32, cluster=8, k=128):
+    spec = NetworkSpec(n_neurons=n, cluster_size=cluster, k_tags=k,
+                       max_cam_words=32, max_sram_entries=16)
+    for s, d, syn in edges:
+        spec.connect(s, d, syn)
+    return spec
+
+
+def test_fabric_determinism_under_event_order_permutation():
+    """Permuting the pre-step event order — the order connections were
+    declared in, which permutes each source's SRAM-entry order and the tag
+    numbering — leaves fabric-mode arrivals (the spike trajectory), link-drop
+    counts, and the integer DeliveryStats bit-identical: arbitration is
+    lowest-source-id-first by contract, never declaration order. (latency/
+    energy are float sums of the same per-event multiset; summation order
+    may differ, so they are compared to tolerance.)"""
+    const = ChipConstants(latency_across_chip_s=2 * DT)
+    fab = Fabric(grid_x=2, grid_y=2, cores_per_tile=1, constants=const)
+    rng = np.random.default_rng(8)
+    edges = _edges_for_determinism(rng)
+    shuffled = list(edges)
+    np.random.default_rng(99).shuffle(shuffled)
+    assert shuffled != edges
+    T = 10
+    i_ext = np.zeros((T, 32), np.float32)
+    i_ext[0, ::2] = 1e4  # kick half the sources at t=0
+    runs = []
+    for e in (edges, shuffled):
+        tables = compile_network(_spec_from_edges(e), fabric=fab)
+        eng = EventEngine(tables, fabric=fab, fabric_options={"dt": DT},
+                          queue_capacity=32)
+        ev = jnp.zeros((T, tables.n_clusters, tables.k_tags))
+        _, (spikes, stats) = eng.run(eng.init_state(), ev, jnp.asarray(i_ext))
+        runs.append((np.asarray(spikes), stats))
+    (s0, st0), (s1, st1) = runs
+    assert s0.sum() > 0 and int(np.asarray(st0.delivered).sum()) > 0
+    np.testing.assert_array_equal(s0, s1)  # arrivals: bit-identical
+    for f in ("dropped", "link_dropped", "delivered", "hops"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st0, f)), np.asarray(getattr(st1, f)), err_msg=f
+        )
+    for f in ("latency_s", "energy_j"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(st0, f)), np.asarray(getattr(st1, f)),
+            rtol=1e-5, err_msg=f,
+        )
+
+
+def test_fabric_determinism_batch_slot_permutation():
+    """Permuting which batch slot carries which stream permutes every output
+    and every per-stream stat exactly — no cross-slot leakage, bit-identical
+    including the float accumulators (per-slot sums are untouched)."""
+    fab = Fabric(grid_x=2, grid_y=1, cores_per_tile=1)
+    rng = np.random.default_rng(12)
+    tables = _random_net(rng, n=8, cluster=4, k=32, edges=14, fabric=fab)
+    eng = EventEngine(tables, fabric=fab, fabric_options={"dt": DT},
+                      queue_capacity=8)
+    b = 4
+    perm = np.asarray([2, 0, 3, 1])
+    spikes = (np.random.default_rng(1).random((b, 8)) < 0.5).astype(np.float32)
+    state, _, inflight = eng.init_state(batch=b)
+    inp = jnp.zeros((b, tables.n_clusters, tables.k_tags))
+    _, (out, stats) = eng.step((state, jnp.asarray(spikes), inflight), inp)
+    _, (out_p, stats_p) = eng.step(
+        (state, jnp.asarray(spikes[perm]), inflight), inp
+    )
+    np.testing.assert_array_equal(np.asarray(out)[perm], np.asarray(out_p))
+    for f in ("dropped", "link_dropped", "delivered", "hops",
+              "latency_s", "energy_j"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(stats, f))[perm],
+            np.asarray(getattr(stats_p, f)), err_msg=f,
+        )
+
+
+def test_link_arbitration_keeps_lowest_source_ids_first():
+    """Four sources on one tile contend for the same capacity-1 link; the
+    survivor must be the lowest source id regardless of declaration order —
+    the arbitration contract the determinism tests above rely on."""
+    const = ChipConstants(latency_across_chip_s=DT)
+    fab = Fabric(grid_x=2, grid_y=1, cores_per_tile=1, constants=const)
+    for order in (range(4), reversed(range(4))):
+        spec = NetworkSpec(n_neurons=8, cluster_size=4, k_tags=8)
+        for s in order:
+            spec.connect(s, 4 + s)  # all cross the single 0 -> 1 link
+        tables = compile_network(spec, fabric=fab)
+        backend = FabricBackend(fabric=fab, tile_of_cluster=tables.tile_of_cluster,
+                                dt=DT, link_capacity=1)
+        inflight = backend.init_inflight(tables.n_clusters, tables.k_tags)
+        spikes = jnp.zeros((8,)).at[jnp.arange(4)].set(1.0)
+        args = (jnp.asarray(tables.src_tag), jnp.asarray(tables.src_dest),
+                jnp.asarray(tables.cam_tag), jnp.asarray(tables.cam_syn),
+                tables.cluster_size, tables.k_tags)
+        drive, inflight, stats = backend.deliver_fabric(
+            spikes, *args, inflight=inflight
+        )
+        assert int(stats.link_dropped) == 3 and int(stats.delivered) == 1
+        drive, inflight, stats = backend.deliver_fabric(
+            jnp.zeros((8,)), *args, inflight=inflight
+        )
+        got = np.nonzero(np.asarray(drive).sum(-1))[0].tolist()
+        assert got == [4], f"survivor was not source 0's event (order {list(order)})"
+
+
 def test_fabric_sharded_step_rejects_split_tiles():
     fab = Fabric(grid_x=2, grid_y=1, cores_per_tile=2)
     spec = NetworkSpec(n_neurons=16, cluster_size=4, k_tags=8)

@@ -72,6 +72,67 @@ def test_optimized_beats_conventional(n, f):
     assert mm.mem_at_optimal_m(n, f, 256) < mm.conventional_bits(n, f)
 
 
+@given(
+    n=st.integers(2**12, 2**24),
+    f=st.integers(64, 2**13),
+    c=st.sampled_from([64, 128, 256, 512, 1024]),
+    alpha=st.sampled_from([0.5, 1.0, 2.0, 4.0]),
+)
+@settings(max_examples=60, deadline=None)
+def test_optimal_m_integer_is_argmin_over_feasible_range(n, f, c, alpha):
+    """Property: ``optimal_m_integer`` is the argmin of eq.(3) over integer
+    M in [1, min(F, C)] — checked against brute force."""
+    m_int = mm.optimal_m_integer(n, f, c, alpha)
+    hi = min(f, c)
+    assert 1 <= m_int <= hi
+    best = mm.mem_total_bits_alpha(n, f, c, m_int, alpha)
+    # brute force on a log-spaced cover plus the exact neighborhood
+    candidates = set(range(max(1, m_int - 3), min(hi, m_int + 3) + 1))
+    m = 1
+    while m <= hi:
+        candidates.add(m)
+        m *= 2
+    candidates.add(hi)
+    for cand in candidates:
+        assert mm.mem_total_bits_alpha(n, f, c, cand, alpha) >= best - 1e-9
+
+
+def test_optimal_m_integer_brute_force_small_ranges():
+    """Deterministic slice of the property above (runs without hypothesis):
+    exhaustive argmin over the whole feasible range."""
+    for n, f, c, alpha in [
+        (2**14, 100, 64, 1.0),
+        (2**20, 2**13, 256, 1.0),
+        (2**16, 500, 128, 2.0),
+        (2**12, 64, 1024, 0.5),
+    ]:
+        m_int = mm.optimal_m_integer(n, f, c, alpha)
+        hi = min(f, c)
+        costs = [mm.mem_total_bits_alpha(n, f, c, m, alpha) for m in range(1, hi + 1)]
+        assert mm.mem_total_bits_alpha(n, f, c, m_int, alpha) == pytest.approx(
+            min(costs)
+        )
+
+
+def test_fig13_crossover_pinned_at_prototype_point():
+    """Fig. 13 pinned row at the prototype design point (N=1024, F=4096,
+    C=256, K=256): at M=1 the two-stage scheme degenerates to point-to-point
+    and costs *more* than conventional routing (tags buy nothing), at the
+    prototype's M=64 it is ~35x cheaper — the crossover the figure plots."""
+    p = mm.paper_prototype_params()
+    conv = mm.conventional_bits(p.n, p.f)
+    assert conv == pytest.approx(40960.0)  # F * log2 N = 4096 * 10
+    # M = 1: (F)(log2 K + log2 N/C) + (K/C) log2 K = 4096*10 + 8 bits
+    assert mm.mem_total_bits(p.n, p.f, p.c, 1, p.k) == pytest.approx(40968.0)
+    assert mm.mem_total_bits(p.n, p.f, p.c, 1, p.k) > conv  # left of crossover
+    # prototype M = 64: 64*(8+2) + 64*8 = 1152 bits/neuron, ~35.6x less
+    at_m64 = mm.mem_total_bits(p.n, p.f, p.c, p.m, p.k)
+    assert at_m64 == pytest.approx(1152.0)
+    assert conv / at_m64 == pytest.approx(35.56, abs=0.01)
+    # the integer optimum at this point is within the hardware's M range
+    assert 1 < mm.optimal_m_integer(p.n, p.f, p.c) <= p.c
+
+
 def test_n_clusters_counts_ragged_tail():
     """n % c != 0 must round UP: 1000 neurons on 256-neuron cores need 4
     cores — floor division reported 3, silently dropping 232 neurons from

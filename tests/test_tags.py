@@ -79,6 +79,30 @@ def test_cam_overflow_raises():
         compile_network(spec)
 
 
+def test_v1_cam_layout_is_target_outer_tag_inner():
+    """Regression: the unit-based materialization must keep the pre-refactor
+    v1 table layout — a multi-source non-shared group writes each target's
+    CAM words for ALL the group's tags contiguously (target-outer,
+    tag-inner), not one unit (tag) at a time. Anything serializing or
+    diffing compiled tables across versions depends on this."""
+    spec = NetworkSpec(n_neurons=32, cluster_size=8, k_tags=8, max_cam_words=16)
+    spec.connect_group(
+        [0, 1, 2], [(16, SynapseType.FAST_EXC), (17, SynapseType.SLOW_EXC)],
+        shared_tag=False, copies=2,
+    )
+    tables = compile_network(spec)
+    # sources 0,1,2 get tags 0,1,2 in cluster 2; each target's row holds
+    # tag 0 x2, tag 1 x2, tag 2 x2 — contiguous per tag, all tags in order
+    np.testing.assert_array_equal(
+        tables.cam_tag[16, :6], [0, 0, 1, 1, 2, 2]
+    )
+    np.testing.assert_array_equal(
+        tables.cam_tag[17, :6], [0, 0, 1, 1, 2, 2]
+    )
+    assert (tables.cam_syn[16, :6] == SynapseType.FAST_EXC).all()
+    assert (tables.cam_syn[17, :6] == SynapseType.SLOW_EXC).all()
+
+
 def test_memory_accounting_counts_occupied_entries():
     spec = NetworkSpec(n_neurons=32, cluster_size=8, k_tags=8, max_cam_words=8)
     spec.connect(0, 16)
