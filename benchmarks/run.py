@@ -12,10 +12,15 @@
 
 Prints ``name,us_per_call,derived`` CSV and writes the routing/dispatch rows
 to ``BENCH_routing.json`` (machine-readable perf trajectory across PRs).
+
+``--profile [DIR]`` wraps the whole sweep in a ``jax.profiler`` trace
+(default ``/tmp/repro_bench_trace``) — open the directory with
+TensorBoard / Perfetto to see per-kernel timings behind any row.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -25,7 +30,28 @@ import traceback
 _ROUTING_MODULES = ("routing_throughput", "dispatch", "serving")
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--profile",
+        nargs="?",
+        const="/tmp/repro_bench_trace",
+        default=None,
+        metavar="DIR",
+        help="capture a jax.profiler trace of the sweep into DIR",
+    )
+    args = ap.parse_args(argv)
+    if args.profile is not None:
+        import jax
+
+        with jax.profiler.trace(args.profile):
+            _run_all()
+        print(f"wrote profiler trace to {args.profile}", file=sys.stderr)
+    else:
+        _run_all()
+
+
+def _run_all() -> None:
     from benchmarks import (
         cnn_poker,
         comparison,

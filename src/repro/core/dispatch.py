@@ -195,7 +195,11 @@ def _stage1_activity(
     queue_capacity: int | None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stage-1 scatter, dense or event-queued: ``(activity, dropped)``."""
-    if queue_capacity is None:
+    if queue_capacity is None or queue_capacity >= spikes.shape[-1]:
+        # capacity >= N makes the queue lossless AND makes compaction pure
+        # overhead: the dense scatter visits the same nonzero entries in the
+        # same (src, entry) order, adding only exact-0.0 terms for silent
+        # sources — bit-identical activity, zero drops, no cumsum/searchsorted
         a = stage1_route(spikes, src_tag, src_dest, n_clusters, k_tags)
         dropped = jnp.zeros(spikes.shape[:-1], jnp.int32)
         return a, dropped
@@ -396,10 +400,21 @@ class FabricBackend(DispatchBackend):
     * :meth:`deliver_fabric` takes and returns the in-flight buffer
       (``[..., max_delay, n_clusters, K]``) so ``EventEngine(fabric=...)``
       can carry it through the scan — events then really arrive late.
+    * :meth:`deliver_fabric_ring` is the **fast path** (DESIGN.md §14): the
+      carried buffer is a time-wheel ring ``[..., max_delay + 1, nc, K]``
+      indexed by a carried write cursor, delivery runs over a static
+      per-SRAM-entry table (kernels/fabric_deliver), and advancing the delay
+      line is a pointer bump — no dense shift. Bit-identical arrival steps,
+      drops and integer stats to the roll path (locked by the ring property
+      suite); the default mode of ``EventEngine(fabric=...)``.
 
+    ``ring=False`` keeps the roll-based carry (the parity reference).
     ``tile_of_cluster`` pins the placement (default: hierarchical linear);
     per-event constants are precomputed once per cluster count
     (routing.build_delivery_model) and uploaded as jnp constants.
+    ``interpret``/``block_c`` configure the fabric_deliver kernel exactly
+    like :class:`FusedBackend` (None = kernel on TPU, jnp fast path
+    elsewhere; True = force interpret mode for CPU validation).
     """
 
     def __init__(
@@ -409,6 +424,9 @@ class FabricBackend(DispatchBackend):
         dt: float = 1e-3,
         vdd: float = 1.3,
         link_capacity: int | None = None,
+        ring: bool = True,
+        block_c: int = 16,
+        interpret: bool | None = None,
     ):
         from repro.core.routing import Fabric
 
@@ -417,6 +435,9 @@ class FabricBackend(DispatchBackend):
         self.dt = float(dt)
         self.vdd = vdd
         self.link_capacity = link_capacity
+        self.ring = bool(ring)
+        self.block_c = block_c
+        self.interpret = interpret
         self._models: dict[int, tuple] = {}
 
     def model_for(self, n_clusters: int):
@@ -455,6 +476,83 @@ class FabricBackend(DispatchBackend):
         model, _ = self.model_for(n_clusters)
         lead = () if batch is None else (batch,) if isinstance(batch, int) else tuple(batch)
         return jnp.zeros((*lead, model.max_delay, n_clusters, k_tags), dtype)
+
+    def init_ring(
+        self,
+        n_clusters: int,
+        k_tags: int,
+        batch: int | tuple[int, ...] | None = None,
+        dtype=jnp.float32,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Zero time-wheel ring ``[..., max_delay + 1, nc, K]`` + cursor 0.
+
+        The cursor is a shared int32 scalar — every batch slot steps in
+        lockstep, so one phase pointer serves the whole pool (DESIGN.md §14).
+        """
+        model, _ = self.model_for(n_clusters)
+        lead = () if batch is None else (batch,) if isinstance(batch, int) else tuple(batch)
+        ring = jnp.zeros((*lead, model.max_delay + 1, n_clusters, k_tags), dtype)
+        return ring, jnp.zeros((), jnp.int32)
+
+    def build_entries(self, src_tag, src_dest, cluster_size: int, k_tags: int):
+        """Static per-SRAM-entry table for the ring fast path (host-side).
+
+        Precomputed once per engine from the routing tables + the delivery
+        model: destination address, arrival delay, link bin and Table II-IV
+        figures per *occupied* SRAM entry, statically sorted in arbitration
+        order. See kernels/fabric_deliver/ops.py.
+        """
+        from repro.kernels.fabric_deliver import ops as fabric_ops
+
+        n_clusters = src_tag.shape[0] // cluster_size
+        model, _ = self.model_for(n_clusters)
+        return fabric_ops.build_fabric_entries(
+            src_tag, src_dest, cluster_size, k_tags, model
+        )
+
+    def deliver_fabric_ring(
+        self,
+        spikes,
+        entries,  # FabricEntries from build_entries
+        cam_tag,
+        cam_syn,
+        cluster_size,
+        k_tags,
+        ring,  # [..., max_delay + 1, nc, K]
+        cursor,  # int32 scalar write cursor
+        external_activity=None,
+        queue_capacity=None,
+        syn_onehot=None,
+    ):
+        """Ring fast-path fabric step: ``(drive, ring, cursor, DeliveryStats)``.
+
+        Event-count-proportional delivery over the static entry table —
+        no per-step SRAM gather, no argsort arbitration, no dense delay-line
+        shift. Kernel-fused on TPU (kernels/fabric_deliver), jnp fast path
+        elsewhere; ``interpret=True`` at construction forces the kernel in
+        interpret mode for CPU validation.
+        """
+        from repro.kernels.fabric_deliver import ops as fabric_ops
+
+        n_clusters = spikes.shape[-1] // cluster_size
+        model, _ = self.model_for(n_clusters)
+        return fabric_ops.fabric_deliver_ring(
+            spikes,
+            entries,
+            cam_tag,
+            cam_syn,
+            cluster_size,
+            k_tags,
+            ring,
+            cursor,
+            max_delay=model.max_delay,
+            link_capacity=model.link_capacity,
+            queue_capacity=queue_capacity,
+            external_activity=external_activity,
+            syn_onehot=syn_onehot,
+            block_c=self.block_c,
+            interpret=self.interpret,
+        )
 
     def cam_match(self, activity, cam_tag, cam_syn, cluster_size, syn_onehot=None):
         return stage2_cam_match(activity, cam_tag, cam_syn, cluster_size, syn_onehot)

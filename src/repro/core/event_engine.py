@@ -192,6 +192,17 @@ class EventEngine:
             cam_syn=cam_syn,
             cam_syn_onehot=precompute_syn_onehot(cam_syn),
         )
+        # ring fast path (DESIGN.md §14): the carry gains a time-wheel ring +
+        # write cursor instead of the shifted in-flight tail, and delivery
+        # runs over a static per-SRAM-entry table precomputed here, once
+        self.fabric_ring = (
+            self.fabric_backend is not None and self.fabric_backend.ring
+        )
+        self._fabric_entries = None
+        if self.fabric_ring:
+            self._fabric_entries = self.fabric_backend.build_entries(
+                tables.src_tag, tables.src_dest, self.cluster_size, self.k_tags
+            )
         # per-engine compiled step (self is closed over = static). Carry
         # donation is opt-in: with donate_carry=True on an accelerator the
         # neuron-state buffers are updated in place across a long run, but a
@@ -204,12 +215,14 @@ class EventEngine:
     # ------------------------------------------------------------------
     def init_state(
         self, batch: int | tuple[int, ...] | None = None
-    ) -> tuple[NeuronState, jax.Array] | tuple[NeuronState, jax.Array, jax.Array]:
+    ) -> tuple:
         """(neuron state, previous-step spikes); batched when ``batch`` set.
 
-        In fabric mode the carry gains a third element: the in-flight
-        delay-line buffer ``[..., max_delay, n_clusters, K]`` of cross-tile
-        events already on the mesh.
+        In fabric mode the carry gains the delay-line state: with the ring
+        fast path (the default) elements 3 and 4 are the time-wheel ring
+        ``[..., max_delay + 1, n_clusters, K]`` and its shared int32 scalar
+        write cursor; with ``fabric_options={"ring": False}`` element 3 is
+        the roll-carried in-flight buffer ``[..., max_delay, nc, K]``.
         """
         lead = () if batch is None else (batch,) if isinstance(batch, int) else tuple(batch)
         carry = (
@@ -218,6 +231,11 @@ class EventEngine:
         )
         if self.fabric_backend is None:
             return carry
+        if self.fabric_ring:
+            ring, cursor = self.fabric_backend.init_ring(
+                self.n_clusters, self.k_tags, batch=batch
+            )
+            return (*carry, ring, cursor)
         inflight = self.fabric_backend.init_inflight(
             self.n_clusters, self.k_tags, batch=batch
         )
@@ -237,8 +255,9 @@ class EventEngine:
         (stats are part of the observable output so ``run``'s scan stacks
         them over T; fabric mode always emits them — drops, hops, latency
         and energy are the point of running the fabric model). In fabric
-        mode the carry is the 3-tuple from :meth:`init_state`, including the
-        in-flight delay-line buffer.
+        mode the carry is the tuple from :meth:`init_state`, including the
+        delay-line state (ring + cursor by default, the in-flight buffer
+        with ``fabric_options={"ring": False}``).
         """
         return self._jit_step(carry, input_activity, i_ext)
 
@@ -250,6 +269,23 @@ class EventEngine:
         input_activity = jnp.asarray(input_activity, dtype)
         if i_ext is not None:
             i_ext = jnp.asarray(i_ext, dtype)
+        if self.fabric_backend is not None and self.fabric_ring:
+            state, prev_spikes, ring, cursor = carry
+            drive, ring, cursor, stats = self.fabric_backend.deliver_fabric_ring(
+                prev_spikes,
+                self._fabric_entries,
+                self.tables.cam_tag,
+                self.tables.cam_syn,
+                self.cluster_size,
+                self.k_tags,
+                ring,
+                cursor,
+                external_activity=input_activity,
+                queue_capacity=self.queue_capacity,
+                syn_onehot=self.tables.cam_syn_onehot,
+            )
+            state, spikes = neuron_mod.neuron_step(state, drive, self.params, i_ext)
+            return (state, spikes, ring, cursor), (spikes, stats)
         if self.fabric_backend is not None:
             state, prev_spikes, inflight = carry
             drive, inflight, stats = self.fabric_backend.deliver_fabric(
@@ -373,7 +409,11 @@ class EventEngine:
         signature becomes ``(tables, state, prev_spikes, inflight,
         input_activity, i_ext) -> (state, spikes, inflight, DeliveryStats)``
         with the in-flight buffer sharded over the cluster axis and stats
-        psum-reduced fabric-wide.
+        psum-reduced fabric-wide. With the ring fast path (the default) the
+        delay-line carry is instead the time-wheel pair: ``(tables, state,
+        prev_spikes, ring, cursor, input_activity, i_ext) -> (state, spikes,
+        ring, cursor, DeliveryStats)`` — the ring sharded like the in-flight
+        buffer, the scalar cursor replicated (``P()``).
         """
         from jax.sharding import PartitionSpec as P
 
@@ -469,7 +509,8 @@ class EventEngine:
                     "(use the hierarchical linear placement or re-shard)"
                 )
 
-        def local_step(tables, state, prev_spikes, inflight, input_activity, i_ext):
+        def _route_local(tables, prev_spikes, cursor=None):
+            """Shared stage-1 body: compact the slab, route through the fabric."""
             n_local = prev_spikes.shape[-1]
             capacity = n_local if queue_capacity is None else queue_capacity
             offset = jax.lax.axis_index(axis) * nc_local
@@ -490,17 +531,12 @@ class EventEngine:
                 latency_s=arrs["latency_s"],
                 energy_j=arrs["energy_j"],
                 src_cluster_offset=offset,
+                cursor=cursor,
             )
             # hand every (delay, cluster) slab to its owner — the R3 hop
             buf = jax.lax.psum_scatter(
                 route.buffer, axis, scatter_dimension=route.buffer.ndim - 2, tiled=True
             )  # [..., max_delay + 1, nc_local, K]
-            a, new_inflight = advance_inflight(buf, inflight, model.max_delay)
-            a = a + input_activity
-            drive = stage2_cam_match(
-                a, tables.cam_tag, tables.cam_syn, cluster_size, tables.cam_syn_onehot
-            )
-            state, spikes = neuron_mod.neuron_step(state, drive, params, i_ext)
             stats = DeliveryStats(
                 dropped=jax.lax.psum(queue.dropped, axis),
                 link_dropped=jax.lax.psum(route.link_dropped, axis),
@@ -509,12 +545,41 @@ class EventEngine:
                 latency_s=jax.lax.psum(route.latency_s, axis),
                 energy_j=jax.lax.psum(route.energy_j, axis),
             )
+            return buf, stats
+
+        def _finish_local(tables, state, a, input_activity, i_ext):
+            a = a + input_activity
+            drive = stage2_cam_match(
+                a, tables.cam_tag, tables.cam_syn, cluster_size, tables.cam_syn_onehot
+            )
+            return neuron_mod.neuron_step(state, drive, params, i_ext)
+
+        def local_step(tables, state, prev_spikes, inflight, input_activity, i_ext):
+            buf, stats = _route_local(tables, prev_spikes)
+            a, new_inflight = advance_inflight(buf, inflight, model.max_delay)
+            state, spikes = _finish_local(tables, state, a, input_activity, i_ext)
             return state, spikes, new_inflight, stats
+
+        def local_step_ring(
+            tables, state, prev_spikes, ring, cursor, input_activity, i_ext
+        ):
+            # wheel semantics of the single-device ring step, with the routed
+            # scatter already cursor-rotated by stage 1: accumulate this
+            # step's arrivals, pop + clear the cursor slot, bump the pointer
+            buf, stats = _route_local(tables, prev_spikes, cursor=cursor)
+            ring = ring + buf
+            slot_ax = ring.ndim - 3
+            a = jnp.take(ring, cursor, axis=slot_ax)
+            ring = jax.lax.dynamic_update_index_in_dim(
+                ring, jnp.zeros_like(a), cursor, slot_ax
+            )
+            state, spikes = _finish_local(tables, state, a, input_activity, i_ext)
+            return state, spikes, ring, (cursor + 1) % (model.max_delay + 1), stats
 
         spec_t = P(axis)
         if batch_axis is None:
             spec_c = P(axis)
-            spec_f = P(None, axis)  # inflight [D, nc, K]: shard clusters
+            spec_f = P(None, axis)  # delay-line carry [D, nc, K]: shard clusters
             spec_d = P()
         else:
             spec_c = P(batch_axis, axis)
@@ -522,17 +587,27 @@ class EventEngine:
             spec_d = P(batch_axis)
         state_spec = NeuronState(spec_c, spec_c, spec_c, spec_c)
         stats_spec = DeliveryStats(spec_d, spec_d, spec_d, spec_d, spec_d, spec_d)
+        in_specs = (
+            _Tables(spec_t, spec_t, spec_t, spec_t, spec_t),
+            state_spec,
+            spec_c,
+            spec_f,
+            spec_c,
+            spec_c,
+        )
+        if self.fabric_ring:
+            # ring sharded like the in-flight buffer; scalar cursor replicated
+            return shard_map(
+                local_step_ring,
+                mesh=mesh,
+                in_specs=(*in_specs[:4], P(), *in_specs[4:]),
+                out_specs=(state_spec, spec_c, spec_f, P(), stats_spec),
+                **SM_CHECK_KW,
+            )
         return shard_map(
             local_step,
             mesh=mesh,
-            in_specs=(
-                _Tables(spec_t, spec_t, spec_t, spec_t, spec_t),
-                state_spec,
-                spec_c,
-                spec_f,
-                spec_c,
-                spec_c,
-            ),
+            in_specs=in_specs,
             out_specs=(state_spec, spec_c, spec_f, stats_spec),
             **SM_CHECK_KW,
         )
@@ -550,8 +625,16 @@ def reset_slots(carry, mask: jax.Array, fresh):
     :meth:`EventEngine.reset_slots` — kept standalone so custom serving
     loops can splice arbitrary per-slot state (e.g. a checkpointed tenant)
     instead of the engine's fresh init.
+
+    Leaves with fewer dims than ``mask`` are slot-*shared* (the ring-mode
+    write cursor: every slot steps in lockstep, so one phase pointer serves
+    the whole pool) and pass through unchanged — zeroing a masked slot's
+    whole ring is phase-independent, so the evicted tenant leaks nothing at
+    any cursor position.
     """
     def sel(cur, new):
+        if cur.ndim < mask.ndim:
+            return cur
         m = mask.reshape(mask.shape + (1,) * (cur.ndim - mask.ndim))
         return jnp.where(m, jnp.asarray(new, cur.dtype), cur)
 

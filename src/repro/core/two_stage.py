@@ -181,6 +181,46 @@ def _accumulate_activity(
     return a[:, :size]
 
 
+def _accumulate_into(
+    buf: jax.Array,  # [B, size] existing per-batch accumulator (e.g. the ring)
+    flat: jax.Array,  # [B, M] or [M] int32 in-range flat indices
+    weights: jax.Array,  # [B, M]
+    _force_path: str | None = None,  # tests only: "flat32" | "flat64" | "2d"
+) -> jax.Array:  # [B, size]
+    """Scatter-add into an EXISTING accumulator, int32-overflow-safe.
+
+    The time-wheel ring fast path (kernels/fabric_deliver) scatters each
+    step's events into the carried ring buffer in place — unlike
+    :func:`_accumulate_activity` there is no sentinel slot, so every index
+    must already be in ``[0, size)`` and masked-out events must carry weight
+    exactly 0 (adding 0.0 is the no-op). Path selection mirrors
+    :func:`_accumulate_activity`: flat int32 offsets while they fit, int64
+    under x64, else 2-D (batch, slot) indices.
+    """
+    b, size = buf.shape
+    if flat.ndim == 1:
+        flat = jnp.broadcast_to(flat[None, :], (b, flat.shape[0]))
+    path = _force_path
+    if path is None:
+        if b * size - 1 <= _INT32_MAX:
+            path = "flat32"
+        elif jax.config.jax_enable_x64:
+            path = "flat64"
+        else:
+            path = "2d"
+    if path in ("flat32", "flat64"):
+        dt = jnp.int32 if path == "flat32" else jnp.int64
+        offsets = jnp.arange(b, dtype=dt)[:, None] * size
+        flat_b = flat.astype(dt) + offsets
+        a = buf.reshape(b * size)
+        a = a.at[flat_b.reshape(-1)].add(weights.reshape(-1), mode="drop")
+        return a.reshape(b, size)
+    bidx = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None], flat.shape)
+    return buf.at[bidx.reshape(-1), flat.reshape(-1)].add(
+        weights.reshape(-1), mode="drop"
+    )
+
+
 def stage1_route(
     spikes: jax.Array,  # [..., N] float event weights (0/1 spikes or rates)
     src_tag: jax.Array,  # [N, E] int32, -1 = empty
@@ -286,6 +326,7 @@ def stage1_route_events_fabric(
     latency_s: jax.Array | None = None,
     energy_j: jax.Array | None = None,
     src_cluster_offset: int | jax.Array = 0,  # sharded: global id of local cluster 0
+    cursor: jax.Array | None = None,  # time-wheel write cursor (ring addressing)
 ) -> FabricRouteResult:
     """Event-sparse stage 1 through the R1/R2/R3 fabric.
 
@@ -304,6 +345,13 @@ def stage1_route_events_fabric(
 
     Per-event stats are summed over *delivered* entries only (each SRAM
     entry is one AER event on the fabric, regardless of its weight).
+
+    With ``cursor`` set, the buffer is addressed as a **time-wheel ring**
+    (DESIGN.md §14): an event with arrival delay ``d`` lands in slot
+    ``(cursor + d) % (max_delay + 1)`` instead of slot ``d``, so the caller
+    can carry the buffer across steps with a pointer bump instead of the
+    dense :func:`~repro.core.dispatch.advance_inflight` shift. Everything
+    else — arbitration, drops, stats — is bit-identical to the roll layout.
     """
     ev_tag, ev_dest = gather_event_entries(queue, src_tag, src_dest)  # [..., Q, E]
     valid = ev_tag >= 0
@@ -333,9 +381,10 @@ def stage1_route_events_fabric(
     delivered = kept.sum((-1, -2), dtype=jnp.int32)
 
     delay = jnp.take(delay_steps.reshape(-1), pair, mode="clip")
+    slot = delay if cursor is None else (cursor + delay) % (max_delay + 1)
     size = (max_delay + 1) * n_clusters * k_tags
     flat = jnp.where(
-        kept, (delay * n_clusters + dst_cl) * k_tags + jnp.clip(ev_tag, 0), size
+        kept, (slot * n_clusters + dst_cl) * k_tags + jnp.clip(ev_tag, 0), size
     )
     weights = queue.weight[..., None] * kept.astype(queue.weight.dtype)
     batch_shape = queue.src.shape[:-1]

@@ -1,0 +1,9 @@
+"""Fused time-wheel fabric delivery (DESIGN.md §14).
+
+The fabric backend's fast path: static per-SRAM-entry routing tables, a
+carried ring buffer indexed by a write cursor instead of the dense
+``advance_inflight`` shift, and a Pallas kernel fusing the ring update with
+the stage-2 CAM match for slot-0 arrivals. ``ops.fabric_deliver_ring`` is
+the entry point; ``ref.fabric_deliver_ring_ref`` is the roll-equivalent
+oracle built from the production two_stage functions.
+"""

@@ -1,0 +1,94 @@
+"""Reference ring-step oracle built from the production roll-path primitives.
+
+``fabric_deliver_ring_ref`` runs the *same* pipeline as the roll-based
+``FabricBackend.deliver_fabric`` — ``compact_events`` →
+``stage1_route_events_fabric`` → stage-2 CAM match — but addresses the
+scatter as a time-wheel (``cursor`` passed through to stage 1) and carries
+the full ``[max_delay + 1]``-slot ring instead of the shifted tail. It is
+the bridge the property suite uses to prove the fast path
+(kernels/fabric_deliver/ops.py) equivalent to the roll path: the ref shares
+its *semantics* with the roll (identical arbitration/drop/stats code) and
+its *carry contract* with the fast path (ring + cursor), so
+
+    roll == ref  locks the wheel addressing,
+    ref == ops   locks the static entry table + prefix-count arbitration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import DeliveryStats
+from repro.core.two_stage import (
+    compact_events,
+    stage1_route_events_fabric,
+    stage2_cam_match,
+)
+
+__all__ = ["fabric_deliver_ring_ref"]
+
+
+def fabric_deliver_ring_ref(
+    spikes: jax.Array,  # [..., N]
+    src_tag: jax.Array,  # [N, E]
+    src_dest: jax.Array,  # [N, E]
+    cam_tag: jax.Array,  # [N, S]
+    cam_syn: jax.Array,  # [N, S]
+    cluster_size: int,
+    k_tags: int,
+    ring: jax.Array,  # [..., max_delay + 1, nc, K]
+    cursor: jax.Array,  # int32 scalar
+    *,
+    cluster_tile: jax.Array,  # [nc]
+    delay_steps: jax.Array,  # [nc, nc]
+    n_tiles: int,
+    max_delay: int,
+    link_capacity: int | None,
+    queue_capacity: int | None = None,
+    external_activity: jax.Array | None = None,
+    syn_onehot: jax.Array | None = None,
+    mesh_hops: jax.Array | None = None,
+    latency_s: jax.Array | None = None,
+    energy_j: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, DeliveryStats]:
+    """One ring-carried fabric step: ``(drive, ring, cursor, DeliveryStats)``."""
+    n = spikes.shape[-1]
+    n_clusters = n // cluster_size
+    d1 = max_delay + 1
+    cursor = jnp.asarray(cursor, jnp.int32)
+    capacity = n if queue_capacity is None else queue_capacity
+    queue = compact_events(spikes, capacity)
+    route = stage1_route_events_fabric(
+        queue,
+        src_tag,
+        src_dest,
+        n_clusters,
+        k_tags,
+        cluster_size,
+        cluster_tile,
+        delay_steps,
+        n_tiles,
+        max_delay,
+        link_capacity,
+        mesh_hops=mesh_hops,
+        latency_s=latency_s,
+        energy_j=energy_j,
+        cursor=cursor,
+    )
+    ring = ring + route.buffer
+    ax = ring.ndim - 3
+    a = jnp.take(ring, cursor, axis=ax)
+    ring = jax.lax.dynamic_update_index_in_dim(ring, jnp.zeros_like(a), cursor, ax)
+    if external_activity is not None:
+        a = a + external_activity
+    drive = stage2_cam_match(a, cam_tag, cam_syn, cluster_size, syn_onehot)
+    stats = DeliveryStats(
+        dropped=queue.dropped,
+        link_dropped=route.link_dropped,
+        delivered=route.delivered,
+        hops=route.hops,
+        latency_s=route.latency_s,
+        energy_j=route.energy_j,
+    )
+    return drive, ring, (cursor + 1) % d1, stats

@@ -51,7 +51,9 @@ __all__ = [
 ]
 
 
-def build_poker_engine(tables, backend: str = "reference") -> EventEngine:
+def build_poker_engine(
+    tables, backend: str = "reference", donate_carry: bool = True
+) -> EventEngine:
     """Event engine at the §V serving operating point for a dispatch backend.
 
     ``backend`` is any registry name (reference / pallas / fused / sharded)
@@ -59,14 +61,27 @@ def build_poker_engine(tables, backend: str = "reference") -> EventEngine:
     board geometry. The AER queue is sized lossless for this workload.
     Shared by examples/poker_dvs_serve.py and benchmarks/serving.py so both
     measure the same engine.
+
+    Serving flips the engine's conservative ``donate_carry`` default to
+    ``True``: the pool always threads the returned carry and never re-reads
+    a stepped one, so on accelerators the pool-sized neuron-state buffers
+    are reused in place every step instead of reallocated. On CPU donation
+    silently no-ops (results are bit-identical either way — the opt-out is
+    for debuggers that want to inspect a pre-step carry after stepping).
     """
     params = poker_neuron_params()
     q_cap = tables.n_neurons
     if backend == "fabric":
         from repro.core.routing import Fabric
 
-        return EventEngine(tables, params, queue_capacity=q_cap, fabric=Fabric())
-    return EventEngine(tables, params, backend=backend, queue_capacity=q_cap)
+        return EventEngine(
+            tables, params, queue_capacity=q_cap, fabric=Fabric(),
+            donate_carry=donate_carry,
+        )
+    return EventEngine(
+        tables, params, backend=backend, queue_capacity=q_cap,
+        donate_carry=donate_carry,
+    )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -211,8 +211,8 @@ def _shuffle_net(fabric, cl=4, k=64, seed=17):
 
 def _measured_mean_hops(tables, fabric):
     eng = EventEngine(tables, fabric=fabric)
-    state, spikes, inflight = eng.init_state()
-    carry = (state, jnp.ones_like(spikes), inflight)
+    state, spikes, *delay = eng.init_state()
+    carry = (state, jnp.ones_like(spikes), *delay)
     _, (_, stats) = eng.step(
         carry, jnp.zeros((tables.n_clusters, tables.k_tags))
     )
@@ -263,16 +263,19 @@ def test_device_slab_placement_runs_sharded_fabric():
     # the 2-slab invariant holds, so forcing the 2-device view must not raise
     step = eng._make_sharded_fabric_step(mesh, "model", None, 2, None)
     sharded_1dev = eng.make_sharded_step(mesh, axis="model")
-    state, prev, inflight = eng.init_state()
+    state, prev, ring, cur = eng.init_state()
     prev = prev.at[jnp.arange(0, res.tables.n_neurons, 3)].set(1.0)
     inp = jnp.zeros((res.tables.n_clusters, res.tables.k_tags))
-    (st_l, sp_l, inf_l), (_, stats_l) = eng.step((state, prev, inflight), inp)
-    st_s, sp_s, inf_s, stats_s = sharded_1dev(
-        eng.tables, state, prev, inflight, inp,
+    (st_l, sp_l, ring_l, cur_l), (_, stats_l) = eng.step(
+        (state, prev, ring, cur), inp
+    )
+    st_s, sp_s, ring_s, cur_s, stats_s = sharded_1dev(
+        eng.tables, state, prev, ring, cur, inp,
         jnp.zeros((res.tables.n_neurons,)),
     )
     np.testing.assert_allclose(np.asarray(sp_l), np.asarray(sp_s), atol=1e-6)
-    np.testing.assert_allclose(np.asarray(inf_l), np.asarray(inf_s), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ring_l), np.asarray(ring_s), atol=1e-6)
+    assert int(cur_l) == int(cur_s)
     assert int(stats_l.delivered) == int(stats_s.delivered)
     assert step is not None
 

@@ -157,7 +157,8 @@ def test_sharded_event_engine_batched_2d_mesh():
 def test_fabric_sharded_step_matches_local_multidevice():
     """Tiles -> devices (DESIGN.md §11): the fabric-mode sharded step on a
     4-device cluster axis matches the local fabric engine bit-for-bit —
-    delay-line arrivals, link-FIFO drops, and the psum-reduced stats."""
+    time-wheel arrivals (ring sharded over clusters, cursor replicated),
+    link-FIFO drops, and the psum-reduced stats."""
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.routing import ChipConstants, Fabric
@@ -179,23 +180,25 @@ def test_fabric_sharded_step_matches_local_multidevice():
                           fabric_options={"dt": dt, "link_capacity": 2})
         mesh = jax.make_mesh((4,), ("model",))  # 1 tile per device
         sharded = eng.make_sharded_step(mesh, "model")
-        state, prev, inflight = eng.init_state()
+        state, prev, ring, cur = eng.init_state()
         prev = prev.at[jnp.arange(0, 64, 2)].set(1.0)
         inp = jnp.zeros((tables.n_clusters, tables.k_tags)).at[:, 0].set(4.0)
         saw_drop = saw_arrival = False
         for _ in range(8):
-            (st_l, sp_l, inf_l), (_, stats_l) = eng.step((state, prev, inflight), inp)
-            st_s, sp_s, inf_s, stats_s = sharded(
-                eng.tables, state, prev, inflight, inp, jnp.zeros((64,)))
+            (st_l, sp_l, ring_l, cur_l), (_, stats_l) = eng.step(
+                (state, prev, ring, cur), inp)
+            st_s, sp_s, ring_s, cur_s, stats_s = sharded(
+                eng.tables, state, prev, ring, cur, inp, jnp.zeros((64,)))
             assert float(jnp.abs(sp_l - sp_s).max()) < 1e-6
-            assert float(jnp.abs(inf_l - inf_s).max()) < 1e-6
+            assert float(jnp.abs(ring_l - ring_s).max()) < 1e-6
+            assert int(cur_l) == int(cur_s)
             assert float(jnp.abs(st_l.v - st_s.v).max()) < 1e-6
             for f in ("dropped", "link_dropped", "delivered", "hops"):
                 assert int(getattr(stats_l, f)) == int(getattr(stats_s, f)), f
             assert abs(float(stats_l.energy_j) - float(stats_s.energy_j)) < 1e-12
             saw_drop |= int(stats_l.link_dropped) > 0
-            saw_arrival |= float(inf_l.sum()) > 0
-            state, prev, inflight = st_l, sp_l, inf_l
+            saw_arrival |= float(ring_l.sum()) > 0
+            state, prev, ring, cur = st_l, sp_l, ring_l, cur_l
         assert saw_drop and saw_arrival  # the interesting paths actually ran
         print("OK")
     """)

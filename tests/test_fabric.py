@@ -253,7 +253,7 @@ def _mean_hops_for_placement(tables, fabric, batch=None):
     carry = eng.init_state(batch=batch)
     lead = () if batch is None else (batch,)
     spikes = jnp.ones((*lead, tables.n_neurons))
-    carry = (carry[0], spikes, carry[2])
+    carry = (carry[0], spikes, *carry[2:])
     inp = jnp.zeros((*lead, tables.n_clusters, tables.k_tags))
     _, (_, stats) = eng.step(carry, inp)
     return float(np.asarray(stats.hops).sum()) / float(np.asarray(stats.delivered).sum())
@@ -306,7 +306,11 @@ def test_fabric_engine_batched_run_stacks_stats():
     for field in ("dropped", "link_dropped", "delivered", "hops"):
         assert getattr(stats, field).shape == (T, b), field
     assert stats.latency_s.shape == (T, b)
-    assert len(carry) == 3 and carry[2].shape == eng.init_state(batch=b)[2].shape
+    # ring-mode carry: (state, spikes, ring, cursor) — the wheel keeps its
+    # shape across the scan and the cursor advances T steps around it
+    fresh = eng.init_state(batch=b)
+    assert len(carry) == 4 and carry[2].shape == fresh[2].shape
+    assert int(carry[3]) == T % (eng.fabric_model.max_delay + 1)
 
 
 def test_fabric_model_inherits_engine_dt():
@@ -352,7 +356,7 @@ def test_fabric_engine_link_overflow_reported():
     eng = EventEngine(tables, fabric=fab,
                       fabric_options={"dt": DT, "link_capacity": 1})
     carry = eng.init_state()
-    carry = (carry[0], jnp.ones((16,)), carry[2])
+    carry = (carry[0], jnp.ones((16,)), *carry[2:])
     _, (_, stats) = eng.step(carry, jnp.zeros((tables.n_clusters, tables.k_tags)))
     src_cl, dst_cl = _entry_pairs(tables)
     cross = np.asarray([
@@ -370,11 +374,14 @@ def test_fabric_engine_link_overflow_reported():
 
 def test_fabric_sharded_step_matches_local():
     """1x1 mesh smoke of the tiles->devices step (multi-device parity lives
-    in test_distributed.py): state, spikes, inflight, and stats agree."""
+    in test_distributed.py): state, spikes, inflight, and stats agree.
+    Pinned to the roll carry (``ring=False``) — the ring-mode sharded step
+    has its own parity coverage in test_fabric_ring.py."""
     fab = Fabric(grid_x=2, grid_y=1, cores_per_tile=2)
     rng = np.random.default_rng(6)
     tables = _random_net(rng, n=32, cluster=8, k=64, edges=60, fabric=fab)
-    eng = EventEngine(tables, fabric=fab, fabric_options={"dt": DT})
+    eng = EventEngine(tables, fabric=fab,
+                      fabric_options={"dt": DT, "ring": False})
     mesh = jax.make_mesh((1,), ("model",))
     sharded = eng.make_sharded_step(mesh, axis="model")
     state, prev, inflight = eng.init_state()
@@ -468,11 +475,11 @@ def test_fabric_determinism_batch_slot_permutation():
     b = 4
     perm = np.asarray([2, 0, 3, 1])
     spikes = (np.random.default_rng(1).random((b, 8)) < 0.5).astype(np.float32)
-    state, _, inflight = eng.init_state(batch=b)
+    state, _, *delay = eng.init_state(batch=b)
     inp = jnp.zeros((b, tables.n_clusters, tables.k_tags))
-    _, (out, stats) = eng.step((state, jnp.asarray(spikes), inflight), inp)
+    _, (out, stats) = eng.step((state, jnp.asarray(spikes), *delay), inp)
     _, (out_p, stats_p) = eng.step(
-        (state, jnp.asarray(spikes[perm]), inflight), inp
+        (state, jnp.asarray(spikes[perm]), *delay), inp
     )
     np.testing.assert_array_equal(np.asarray(out)[perm], np.asarray(out_p))
     for f in ("dropped", "link_dropped", "delivered", "hops",

@@ -354,3 +354,58 @@ class TestInputActivityHardening:
 
     def test_empty_stream_still_fine(self, cc):
         assert cc.input_activity(np.zeros((0, 2))).sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# carry donation (DESIGN.md §14): serving default, CPU no-op, result parity
+# ---------------------------------------------------------------------------
+def test_donate_carry_kwargs_by_backend(monkeypatch):
+    """Donation resolves per platform: on CPU the jit gets no donate kwargs
+    (XLA:CPU would warn on every compile), on accelerators the carry
+    (argument 0) is donated."""
+    from repro.core import event_engine as ee
+
+    monkeypatch.setattr(ee.jax, "default_backend", lambda: "cpu")
+    assert ee._donate_carry_kwargs() == {}
+    for plat in ("tpu", "gpu"):
+        monkeypatch.setattr(ee.jax, "default_backend", lambda p=plat: p)
+        assert ee._donate_carry_kwargs() == {"donate_argnums": (0,)}
+
+
+def test_build_poker_engine_donates_by_default():
+    """Serving flips the engine's conservative default: build_poker_engine
+    requests donation unless opted out (the pool always threads the
+    returned carry, so donation is safe there)."""
+    import inspect
+
+    from repro.serve.aer import build_poker_engine
+
+    sig = inspect.signature(build_poker_engine)
+    assert sig.parameters["donate_carry"].default is True
+    assert (
+        inspect.signature(EventEngine.__init__).parameters["donate_carry"].default
+        is False
+    )
+
+
+def test_donation_flag_does_not_change_results():
+    """donate on vs off: bit-identical spikes and carry over a run (on CPU
+    donation no-ops; on accelerators the donated buffers are reused in
+    place but the values must match — the pool never re-reads a stepped
+    carry, so this is the only observable surface)."""
+    rng = np.random.default_rng(21)
+    tables = _small_net(rng)
+    t, b = 6, 2
+    inp = jnp.asarray(
+        (np.random.default_rng(22).random((t, b, 4, 32)) < 0.2) * 3.0, jnp.float32
+    )
+    outs = []
+    for donate in (False, True):
+        eng = EventEngine(tables, queue_capacity=16, donate_carry=donate)
+        carry, (spikes, stats) = eng.run(eng.init_state(batch=b), inp)
+        outs.append((carry, spikes, stats))
+    (c0, s0, st0), (c1, s1, st1) = outs
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    for a, bb in zip(jax.tree_util.tree_leaves((c0, st0)),
+                     jax.tree_util.tree_leaves((c1, st1))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
