@@ -19,12 +19,16 @@ bench-smoke job asserts these rows land in BENCH_routing.json.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 
 import numpy as np
 
 from repro.core.cnn import compile_poker_cnn, poker_neuron_params
+from repro.core.compiler import repair_placement
+from repro.core.faults import FaultSpec
+from repro.core.routing import Fabric
 from repro.data.pipeline import DvsStreamConfig, DvsStreamSource
 from repro.serve.aer import (
     AerServeConfig,
@@ -101,4 +105,46 @@ def run() -> list[tuple[str, float, str]]:
             f"{ratio:.2f}x_fabric_step_vs_fused_pool{top}",
         )
     )
+
+    # degradation curve (DESIGN.md §15): the same serving loop on the
+    # executable fabric with dead mesh links — first unrepaired (events are
+    # lost on the severed routes), then with the placement re-annealed
+    # around the fault set by compiler.repair_placement. The rows carry
+    # accuracy and measured link drops so the curve, not just the speed,
+    # is regression-tracked. CI chaos-smoke asserts these rows exist.
+    dead = (
+        ((0, 1),)
+        if SMOKE
+        else ((0, 1), (1, 0), (0, 3), (3, 0), (1, 2), (2, 1))  # 25% of links
+    )
+    faults = FaultSpec(dead_links=dead)
+    placement, report = repair_placement(cc.tables, Fabric(), faults, seed=0)
+    cc_repaired = dataclasses.replace(
+        cc, tables=dataclasses.replace(cc.tables, tile_of_cluster=placement)
+    )
+    pool_size = pools[0]
+    scenarios = [
+        (f"{len(dead)}link", cc),
+        ("repaired", cc_repaired if report["feasible"] else cc),
+    ]
+    for tag, c in scenarios:
+        engine = build_poker_engine(c.tables, "fabric", faults=faults)
+        pool = AerSessionPool(
+            c, engine, AerServeConfig(pool_size=pool_size, max_steps=max_steps)
+        )
+        pool.serve(_sessions(2, seed=5))  # warm the jitted faulted step
+        steps0 = pool.n_steps
+        t0 = time.perf_counter()
+        results = pool.serve(_sessions(2 * pool_size))
+        wall = time.perf_counter() - t0
+        steps = pool.n_steps - steps0
+        acc = float(np.mean([r.correct for r in results]))
+        drops = int(sum(r.link_dropped for r in results))
+        out.append(
+            (
+                f"serving_degraded_{tag}_pool{pool_size}",
+                wall / steps * 1e6,
+                f"acc_{acc:.2f}_drops_{drops}_{len(results) / wall:.1f}sess_s",
+            )
+        )
     return out

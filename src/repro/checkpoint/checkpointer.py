@@ -67,10 +67,13 @@ class Checkpointer:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        # an async write's exception must not vanish with its daemon thread:
+        # it is captured here and re-raised on the next wait()/save()
+        self._error: BaseException | None = None
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree, blocking: bool = False) -> None:
-        self.wait()  # one outstanding save at a time
+        self.wait()  # one outstanding save at a time; re-raises a failed one
         keys, leaves, _ = _flatten(tree)
         host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
 
@@ -92,16 +95,33 @@ class Checkpointer:
             os.rename(tmp, final)
             self._gc()
 
+        def _write_guarded():
+            # atomicity on failure too: the rename never ran, so only the
+            # .tmp dir can exist — remove it so a half-written snapshot is
+            # not even visible as debris
+            try:
+                _write()
+            except BaseException as e:  # noqa: BLE001 — re-raised in wait()
+                self._error = e
+                shutil.rmtree(
+                    os.path.join(self.dir, f"step_{step}.tmp"),
+                    ignore_errors=True,
+                )
+
         if blocking:
             _write()
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread = threading.Thread(target=_write_guarded, daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join the outstanding async save; re-raise its failure, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from e
 
     def _gc(self) -> None:
         steps = sorted(self.steps())

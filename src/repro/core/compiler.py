@@ -72,6 +72,7 @@ __all__ = [
     "traffic_matrix",
     "placement_cost",
     "optimize_placement",
+    "repair_placement",
     "build_report",
     "compile_network_v2",
 ]
@@ -181,6 +182,8 @@ def optimize_placement(
     seed: int = 0,
     anneal_steps: int | None = None,
     device_slabs: int | None = None,
+    hop_matrix: np.ndarray | None = None,
+    allowed_tiles: np.ndarray | None = None,
 ) -> tuple[np.ndarray, dict]:
     """Traffic-aware cluster->tile placement (simulated annealing + greedy).
 
@@ -188,6 +191,13 @@ def optimize_placement(
     capacity, starting from ``init`` (default: the hierarchical linear
     placement). Returns ``(placement, info)`` where ``info`` records the
     initial/final cost and predicted mean hops per delivered event.
+
+    ``hop_matrix`` overrides the fabric's XY-hop matrix as the objective —
+    it must be symmetric (the incremental swap/move deltas assume it); the
+    degraded-mode repair path (:func:`repair_placement`) passes a penalty
+    matrix here so traffic is steered off dead links. ``allowed_tiles`` is
+    a boolean ``[n_tiles]`` mask restricting the search (and ``init``,
+    which must already comply) to live tiles.
 
     ``device_slabs=g`` restricts the search to placements where every tile's
     clusters lie inside one of ``g`` equal contiguous cluster slabs — the
@@ -209,7 +219,40 @@ def optimize_placement(
     if traffic.shape != (nc, nc):
         raise ValueError(f"traffic must be square, got {traffic.shape}")
     p = validate_placement(fabric, nc, init).astype(np.int64).copy()
-    h = tile_hop_matrix(fabric).astype(np.float64)
+    if hop_matrix is None:
+        h = tile_hop_matrix(fabric).astype(np.float64)
+    else:
+        h = np.asarray(hop_matrix, dtype=np.float64)
+        if h.shape != (fabric.n_tiles, fabric.n_tiles):
+            raise ValueError(
+                f"hop_matrix has shape {h.shape}, expected "
+                f"({fabric.n_tiles}, {fabric.n_tiles})"
+            )
+        if not np.array_equal(h, h.T):
+            raise ValueError(
+                "hop_matrix must be symmetric — the incremental swap/move "
+                "deltas assume H[a, b] == H[b, a]"
+            )
+    allowed = None
+    if allowed_tiles is not None:
+        allowed = np.asarray(allowed_tiles, dtype=bool)
+        if allowed.shape != (fabric.n_tiles,):
+            raise ValueError(
+                f"allowed_tiles has shape {allowed.shape}, expected "
+                f"({fabric.n_tiles},)"
+            )
+        live_capacity = int(allowed.sum()) * fabric.cores_per_tile
+        if live_capacity < nc:
+            raise ValueError(
+                f"{nc} clusters cannot fit on {int(allowed.sum())} live tiles "
+                f"x {fabric.cores_per_tile} cores ({live_capacity} slots)"
+            )
+        if not allowed[p].all():
+            bad = np.flatnonzero(~allowed[p])
+            raise ValueError(
+                f"init places clusters {bad.tolist()} on disallowed tiles "
+                f"{np.unique(p[bad]).tolist()}"
+            )
     s = traffic + traffic.T
     cost0 = placement_cost(traffic, h, p)
     total = float(traffic.sum())
@@ -256,6 +299,8 @@ def optimize_placement(
             temp *= cool
             i = int(rng.integers(nc))
             spare = tile_count < fabric.cores_per_tile
+            if allowed is not None:
+                spare &= allowed
             if slab_of is not None:
                 spare &= (tile_owner == -1) | (tile_owner == slab_of[i])
             do_move = spare.any() and rng.random() < 0.3
@@ -302,6 +347,103 @@ def optimize_placement(
     info["cost_final"] = cost1
     info["mean_hops_final"] = cost1 / total if total else 0.0
     return placement, info
+
+
+def repair_placement(
+    tables: RoutingTables,
+    fabric,
+    faults,
+    *,
+    rates: np.ndarray | Sequence[float] | None = None,
+    seed: int = 0,
+    anneal_steps: int | None = None,
+) -> tuple[np.ndarray, dict]:
+    """Degraded-mode placement repair around a :class:`~repro.core.faults.FaultSpec`.
+
+    Re-runs :func:`optimize_placement` with the fault-severed fabric masked
+    out: dead tiles are excluded from the search, and tile pairs whose XY
+    route crosses a dead link (either direction — the annealer's objective
+    must be symmetric, so a pair is penalized if *either* direction is
+    severed) cost a prohibitive penalty instead of their hop count; lossy
+    links add a proportional bias so traffic prefers clean routes. The
+    compiled placement (``tables.tile_of_cluster``) seeds the search, with
+    clusters on dead tiles first relocated to the nearest live tile with
+    spare capacity — surviving sessions can then migrate with
+    ``EventEngine.splice_slots`` instead of restarting.
+
+    Returns ``(placement, report)``. ``report["feasible"]`` is ``True`` iff
+    no traffic remains on a *directionally* unreachable tile pair under the
+    final placement (the symmetric penalty is conservative; feasibility is
+    checked against the true directed reachability);
+    ``report["unreachable_traffic"]`` / ``report["unreachable_pairs"]``
+    quantify what is still stranded, ``report["moved_clusters"]`` lists the
+    clusters whose tile changed, and the :func:`optimize_placement` cost
+    figures ride along (computed against the penalty matrix) next to
+    ``mean_hops_final_true`` (the real XY hop count of the result).
+    """
+    from repro.core.faults import tile_fault_matrices
+    from repro.core.routing import default_tile_of_cluster, tile_hop_matrix
+
+    if not isinstance(tables, RoutingTables) and hasattr(tables, "tables"):
+        tables = tables.tables
+    faults.validate(fabric)
+    nc = tables.n_clusters
+    alive, rate = tile_fault_matrices(fabric, faults)
+    tile_ok = np.ones(fabric.n_tiles, dtype=bool)
+    tile_ok[list(faults.dead_tiles)] = False
+    h = tile_hop_matrix(fabric).astype(np.float64)
+    penalty = (float(h.max()) + 1.0) * 1e6
+    ok = alive & alive.T
+    h_eff = np.where(ok, h, penalty)
+    # lossy (but live) routes: bias proportional to the worse direction's
+    # compound drop probability, scaled past any clean detour's hop cost
+    h_eff = h_eff + np.maximum(rate, rate.T) * (float(h.max()) + 1.0)
+    np.fill_diagonal(h_eff, 0.0)
+
+    traffic = traffic_matrix(tables, rates)
+    init = tables.tile_of_cluster
+    if init is None:
+        init = default_tile_of_cluster(nc, fabric)
+    p0 = np.asarray(init, dtype=np.int64).copy()
+    p = p0.copy()
+    # evacuate dead tiles before seeding the annealer (its init must comply)
+    tile_count = np.bincount(p, minlength=fabric.n_tiles)
+    for c in np.flatnonzero(~tile_ok[p]):
+        spare = tile_ok & (tile_count < fabric.cores_per_tile)
+        if not spare.any():
+            raise ValueError(
+                f"cannot evacuate cluster {c} from dead tile {int(p[c])}: "
+                "no live tile has spare capacity"
+            )
+        t = int(np.flatnonzero(spare)[np.argmin(h[p[c]][spare])])
+        tile_count[p[c]] -= 1
+        p[c] = t
+        tile_count[t] += 1
+
+    placement, info = optimize_placement(
+        traffic,
+        fabric,
+        init=p.astype(np.int32),
+        seed=seed,
+        anneal_steps=anneal_steps,
+        hop_matrix=h_eff,
+        allowed_tiles=tile_ok,
+    )
+    pair_alive = alive[placement[:, None], placement[None, :]]
+    stranded = traffic * ~pair_alive
+    np.fill_diagonal(stranded, 0.0)  # a cluster's self-traffic stays on-tile
+    bad = np.argwhere(stranded > 0)
+    cost_true = placement_cost(traffic, h, placement)
+    total = float(traffic.sum())
+    report = {
+        **info,
+        "feasible": bool(stranded.sum() == 0),
+        "unreachable_traffic": float(stranded.sum()),
+        "unreachable_pairs": [(int(a), int(b)) for a, b in bad],
+        "moved_clusters": np.flatnonzero(placement != p0).tolist(),
+        "mean_hops_final_true": cost_true / total if total else 0.0,
+    }
+    return placement, report
 
 
 # ---------------------------------------------------------------------------

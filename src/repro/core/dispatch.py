@@ -40,6 +40,7 @@ import inspect
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.two_stage import (
     N_SYN_TYPES,
@@ -427,6 +428,7 @@ class FabricBackend(DispatchBackend):
         ring: bool = True,
         block_c: int = 16,
         interpret: bool | None = None,
+        faults=None,  # faults.FaultSpec | None — injected topology faults (§15)
     ):
         from repro.core.routing import Fabric
 
@@ -438,7 +440,11 @@ class FabricBackend(DispatchBackend):
         self.ring = bool(ring)
         self.block_c = block_c
         self.interpret = interpret
+        self.faults = faults
+        if faults is not None:
+            faults.validate(self.fabric)
         self._models: dict[int, tuple] = {}
+        self._entry_alive_cache: dict[tuple, jax.Array | None] = {}
 
     def model_for(self, n_clusters: int):
         """(FabricDeliveryModel, jnp constant arrays) for a cluster count."""
@@ -453,6 +459,7 @@ class FabricBackend(DispatchBackend):
                 tile_of_cluster=self.tile_of_cluster,
                 vdd=self.vdd,
                 link_capacity=self.link_capacity,
+                faults=self.faults,
             )
             arrays = {
                 "cluster_tile": jnp.asarray(model.tile_of_cluster),
@@ -509,6 +516,27 @@ class FabricBackend(DispatchBackend):
         return fabric_ops.build_fabric_entries(
             src_tag, src_dest, cluster_size, k_tags, model
         )
+
+    def entry_alive_for(self, src_tag, src_dest, cluster_size: int):
+        """Per-SRAM-entry survival mask ``[N, E]`` (bool) or ``None``.
+
+        ``None`` when no faults sever any route — the roll path then skips
+        the per-event gather entirely. Cached per table identity so repeat
+        engine builds don't redraw the erasure Bernoulli.
+        """
+        if self.faults is None or not self.faults.routes_faulted:
+            return None
+        src_tag = np.asarray(src_tag)
+        src_dest = np.asarray(src_dest)
+        key = (id(src_tag), id(src_dest), cluster_size)
+        if key not in self._entry_alive_cache:
+            from repro.core.faults import entry_alive_mask
+
+            n_clusters = src_tag.shape[0] // cluster_size
+            model, _ = self.model_for(n_clusters)
+            mask = entry_alive_mask(src_tag, src_dest, cluster_size, model)
+            self._entry_alive_cache[key] = None if mask is None else jnp.asarray(mask)
+        return self._entry_alive_cache[key]
 
     def deliver_fabric_ring(
         self,
@@ -570,6 +598,7 @@ class FabricBackend(DispatchBackend):
         external_activity=None,
         queue_capacity=None,
         syn_onehot=None,
+        entry_alive=None,  # [N, E] bool fault-survival mask (None → auto from faults)
     ):
         """Full fabric step: ``(drive, new_inflight, DeliveryStats)``.
 
@@ -579,6 +608,8 @@ class FabricBackend(DispatchBackend):
         n = spikes.shape[-1]
         n_clusters = n // cluster_size
         model, arrs = self.model_for(n_clusters)
+        if entry_alive is None and self.faults is not None:
+            entry_alive = self.entry_alive_for(src_tag, src_dest, cluster_size)
         capacity = n if queue_capacity is None else queue_capacity
         queue = compact_events(spikes, capacity)
         route = stage1_route_events_fabric(
@@ -596,6 +627,7 @@ class FabricBackend(DispatchBackend):
             mesh_hops=arrs["mesh_hops"],
             latency_s=arrs["latency_s"],
             energy_j=arrs["energy_j"],
+            entry_alive=entry_alive,
         )
         a, new_inflight = advance_inflight(route.buffer, inflight, model.max_delay)
         if external_activity is not None:

@@ -78,10 +78,31 @@ from repro.core.two_stage import N_SYN_TYPES, precompute_syn_onehot
 __all__ = [
     "EventEngine",
     "DeliveryStats",
+    "SlotCarry",
     "reset_slots",
     "dense_weights_from_tables",
     "dense_reference_step",
 ]
+
+
+@dataclasses.dataclass
+class SlotCarry:
+    """Host-side serialization of a set of batch slots' full runtime state.
+
+    Produced by :meth:`EventEngine.extract_slots`, consumed by
+    :meth:`EventEngine.splice_slots` — the unit of session *migration*
+    between engines (DESIGN.md §15). All leaves are numpy with leading dim
+    ``S`` (the extracted slot count). ``inflight`` is the delay-line state
+    in the *phase-normalized* roll layout — ``inflight[:, i]`` holds tag
+    activity arriving ``i + 1`` steps after extraction — regardless of
+    whether the source engine ran the ring fast path or the roll buffer, so
+    a slot can be spliced across delivery modes and across engines whose
+    ring cursors disagree. ``None`` when the source engine had no fabric.
+    """
+
+    state: NeuronState  # numpy leaves, each [S, ...]
+    spikes: np.ndarray  # [S, N] previous-step spikes
+    inflight: np.ndarray | None  # [S, max_delay, n_clusters, K] or None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +205,15 @@ class EventEngine:
             # build the delivery model eagerly: placement errors surface at
             # engine construction, and max_delay is needed by init_state
             self.fabric_model, _ = self.fabric_backend.model_for(self.n_clusters)
+        # fault injection (DESIGN.md §15): the per-SRAM-entry survival mask is
+        # drawn once, host-side, so both delivery paths consume the identical
+        # erasure pattern — the ring path bakes it into FabricEntries.alive,
+        # the roll path gathers it per queued event through this constant
+        self._fault_entry_alive = None
+        if self.fabric_backend is not None:
+            self._fault_entry_alive = self.fabric_backend.entry_alive_for(
+                tables.src_tag, tables.src_dest, self.cluster_size
+            )
         cam_syn = jnp.asarray(tables.cam_syn)
         self.tables = _Tables(
             src_tag=jnp.asarray(tables.src_tag),
@@ -300,6 +330,7 @@ class EventEngine:
                 external_activity=input_activity,
                 queue_capacity=self.queue_capacity,
                 syn_onehot=self.tables.cam_syn_onehot,
+                entry_alive=self._fault_entry_alive,
             )
             state, spikes = neuron_mod.neuron_step(state, drive, self.params, i_ext)
             # fabric mode always reports stats: drops/hops/latency/energy are
@@ -344,6 +375,141 @@ class EventEngine:
             raise ValueError("reset_slots needs a batched carry (mask per slot)")
         fresh = self.init_state(batch=mask.shape)
         return reset_slots(carry, mask, fresh)
+
+    # ------------------------------------------------------------------
+    # Slot migration (DESIGN.md §15): extract_slots / splice_slots generalize
+    # reset_slots — instead of wiping a slot, serialize its complete runtime
+    # state (including the fabric delay-line contents) so surviving sessions
+    # can move onto a repaired engine or come back from a checkpoint.
+    def _check_slot_index(self, slots, batch: int) -> np.ndarray:
+        idx = np.atleast_1d(np.asarray(slots, dtype=np.int64))
+        if idx.ndim != 1 or idx.size == 0:
+            raise ValueError("slots must be a non-empty 1-D index sequence")
+        if np.unique(idx).size != idx.size:
+            raise ValueError(f"slots must be unique, got {idx.tolist()}")
+        if np.any(idx < 0) or np.any(idx >= batch):
+            raise ValueError(
+                f"slots {idx.tolist()} out of range for batch size {batch}"
+            )
+        return idx
+
+    def extract_slots(self, carry, slots) -> SlotCarry:
+        """Serialize ``slots``' full per-slot runtime state (host-side).
+
+        The carry must bear exactly one leading batch dim (a session pool).
+        Ring-mode delay state is phase-normalized on the way out: wheel slot
+        ``(cursor + i) % (max_delay + 1)`` holds the events arriving in
+        ``i + 1`` steps, so the returned ``inflight[:, i]`` has the roll
+        layout and the wheel phase does not travel with the snapshot.
+        """
+        spikes = np.asarray(carry[1])
+        if spikes.ndim != 2:
+            raise ValueError(
+                "extract_slots needs a carry with one leading batch dim, got "
+                f"spikes shape {spikes.shape}"
+            )
+        idx = self._check_slot_index(slots, spikes.shape[0])
+        state = jax.tree_util.tree_map(lambda x: np.asarray(x)[idx], carry[0])
+        inflight = None
+        if self.fabric_backend is not None:
+            if self.fabric_ring:
+                ring = np.asarray(carry[2])  # [B, max_delay + 1, nc, K]
+                cur = int(np.asarray(carry[3]))
+                d1 = ring.shape[-3]
+                order = (cur + np.arange(d1 - 1)) % d1
+                inflight = ring[idx][:, order]
+            else:
+                inflight = np.asarray(carry[2])[idx]
+        return SlotCarry(state=state, spikes=spikes[idx], inflight=inflight)
+
+    def splice_slots(self, carry, slots, sc: SlotCarry):
+        """Write ``sc``'s serialized slots into ``carry`` at ``slots``.
+
+        The inverse of :meth:`extract_slots`, on *this* engine's carry —
+        the source engine may differ (that is the point: migration onto a
+        repaired placement, or restore into a fresh pool). Neuron count,
+        cluster count and K must match. Delay-line contents are re-bucketed
+        when the two engines' ``max_delay`` differ: shorter horizons gain
+        zero tail slots; longer horizons fold the excess tail into the last
+        slot (events arrive *earlier* than on the source fabric — best
+        effort; the exchange is bit-exact when the horizons agree).
+        Unlisted slots are untouched bit-identically.
+        """
+        spikes_t = carry[1]
+        if spikes_t.ndim != 2:
+            raise ValueError(
+                "splice_slots needs a carry with one leading batch dim, got "
+                f"spikes shape {spikes_t.shape}"
+            )
+        idx = self._check_slot_index(slots, spikes_t.shape[0])
+        sp = np.asarray(sc.spikes)
+        if sp.shape[0] != idx.size:
+            raise ValueError(
+                f"{idx.size} slots but SlotCarry holds {sp.shape[0]}"
+            )
+        if sp.shape[-1] != self.n_neurons:
+            raise ValueError(
+                f"SlotCarry has {sp.shape[-1]} neurons, engine has "
+                f"{self.n_neurons}"
+            )
+        jidx = jnp.asarray(idx)
+        state = jax.tree_util.tree_map(
+            lambda cur, new: cur.at[jidx].set(jnp.asarray(new, cur.dtype)),
+            carry[0],
+            sc.state,
+        )
+        spikes = spikes_t.at[jidx].set(jnp.asarray(sp, spikes_t.dtype))
+        if self.fabric_backend is None:
+            if sc.inflight is not None and np.any(np.asarray(sc.inflight)):
+                raise ValueError(
+                    "SlotCarry holds in-flight fabric events but the target "
+                    "engine has no fabric delay line to receive them"
+                )
+            return (state, spikes)
+        d_t = self.fabric_model.max_delay
+        if sc.inflight is None:
+            inflight = np.zeros(
+                (idx.size, d_t, self.n_clusters, self.k_tags), np.float32
+            )
+        else:
+            inflight = np.asarray(sc.inflight)
+            if inflight.shape[-2:] != (self.n_clusters, self.k_tags):
+                raise ValueError(
+                    f"SlotCarry in-flight grid {inflight.shape[-2:]} != "
+                    f"engine ({self.n_clusters}, {self.k_tags})"
+                )
+            d_s = inflight.shape[1]
+            if d_s > d_t:  # fold the excess tail into the last live slot
+                if d_t == 0:
+                    if np.any(inflight):
+                        raise ValueError(
+                            "target engine has no delay line (max_delay=0) "
+                            "but the SlotCarry holds in-flight events"
+                        )
+                    inflight = inflight[:, :0]
+                else:
+                    inflight = np.concatenate(
+                        [
+                            inflight[:, : d_t - 1],
+                            inflight[:, d_t - 1 :].sum(axis=1, keepdims=True),
+                        ],
+                        axis=1,
+                    )
+            elif d_s < d_t:
+                pad = np.zeros(
+                    (idx.size, d_t - d_s, *inflight.shape[2:]), inflight.dtype
+                )
+                inflight = np.concatenate([inflight, pad], axis=1)
+        if self.fabric_ring:
+            ring, cursor = carry[2], carry[3]
+            cur = int(np.asarray(cursor))
+            d1 = d_t + 1
+            rows = np.zeros((idx.size, d1, *inflight.shape[2:]), inflight.dtype)
+            rows[:, (cur + np.arange(d_t)) % d1] = inflight
+            ring = ring.at[jidx].set(jnp.asarray(rows, ring.dtype))
+            return (state, spikes, ring, cursor)
+        infl = carry[2].at[jidx].set(jnp.asarray(inflight, carry[2].dtype))
+        return (state, spikes, infl)
 
     def run(
         self,
@@ -427,6 +593,11 @@ class EventEngine:
             queue_capacity = max(1, -(-queue_capacity // n_dev))
 
         if self.fabric_backend is not None:
+            if self.fabric_backend.faults is not None:
+                raise NotImplementedError(
+                    "fault injection is not supported by the sharded fabric "
+                    "step — run faulted scenarios single-device (DESIGN.md §15)"
+                )
             return self._make_sharded_fabric_step(
                 mesh, axis, batch_axis, n_dev, queue_capacity
             )

@@ -327,6 +327,7 @@ def stage1_route_events_fabric(
     energy_j: jax.Array | None = None,
     src_cluster_offset: int | jax.Array = 0,  # sharded: global id of local cluster 0
     cursor: jax.Array | None = None,  # time-wheel write cursor (ring addressing)
+    entry_alive: jax.Array | None = None,  # [N_local, E] bool fault mask (§15)
 ) -> FabricRouteResult:
     """Event-sparse stage 1 through the R1/R2/R3 fabric.
 
@@ -352,9 +353,22 @@ def stage1_route_events_fabric(
     can carry the buffer across steps with a pointer bump instead of the
     dense :func:`~repro.core.dispatch.advance_inflight` shift. Everything
     else — arbitration, drops, stats — is bit-identical to the roll layout.
+
+    ``entry_alive`` is the static per-SRAM-entry fault mask of
+    :func:`repro.core.faults.entry_alive_mask`: a ``False`` entry's events
+    are dropped before link arbitration (they never consume a live link's
+    FIFO slots) and counted in ``link_dropped`` — a dead link is a
+    zero-capacity link. Same semantics as the severed entries of the ring
+    fast path, so ring/roll parity holds under faults too.
     """
     ev_tag, ev_dest = gather_event_entries(queue, src_tag, src_dest)  # [..., Q, E]
     valid = ev_tag >= 0
+    fault_dropped = None
+    if entry_alive is not None:
+        safe = jnp.clip(queue.src, 0, src_tag.shape[0] - 1)
+        ev_alive = jnp.take(entry_alive, safe, axis=0)  # [..., Q, E]
+        fault_dropped = (valid & ~ev_alive).sum((-1, -2), dtype=jnp.int32)
+        valid = valid & ev_alive
     src_cl = jnp.where(
         queue.src >= 0, queue.src // cluster_size + src_cluster_offset, 0
     ).astype(jnp.int32)
@@ -378,6 +392,8 @@ def stage1_route_events_fabric(
 
     kept = valid & (~cross | keep_cross)
     link_dropped = (cross & ~keep_cross).sum((-1, -2), dtype=jnp.int32)
+    if fault_dropped is not None:
+        link_dropped = link_dropped + fault_dropped
     delivered = kept.sum((-1, -2), dtype=jnp.int32)
 
     delay = jnp.take(delay_steps.reshape(-1), pair, mode="clip")

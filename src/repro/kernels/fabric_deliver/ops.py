@@ -71,13 +71,17 @@ class FabricEntries:
     latency_s: jax.Array  # [M] float32 per-event latency (Table II)
     energy_j: jax.Array  # [M] float32 per-event energy (Table III/IV)
     valid: jax.Array  # [M] bool
+    # fault injection (DESIGN.md §15): a False entry is statically severed
+    # (dead tile/link or Bernoulli route erasure) — its events always drop,
+    # are counted in link_dropped, and never consume link-FIFO capacity
+    alive: jax.Array  # [M] bool
 
 
 jax.tree_util.register_dataclass(
     FabricEntries,
     data_fields=[
         "src", "dstk", "delay", "cross", "link_start", "hops",
-        "latency_s", "energy_j", "valid",
+        "latency_s", "energy_j", "valid", "alive",
     ],
     meta_fields=[],
 )
@@ -89,12 +93,24 @@ def build_fabric_entries(
     cluster_size: int,
     k_tags: int,
     model,  # routing.FabricDeliveryModel
+    entry_alive=None,  # [N, E] bool fault mask (faults.entry_alive_mask)
 ) -> FabricEntries:
-    """Host-side precompute of the static entry table (numpy, once per engine)."""
+    """Host-side precompute of the static entry table (numpy, once per engine).
+
+    ``entry_alive`` (from :func:`repro.core.faults.entry_alive_mask`, or
+    derived here from the model's fault matrices when omitted) statically
+    severs faulted entries: they keep their table row — so the fault is
+    *observable* as a per-step ``link_dropped`` count — but never deliver
+    and never occupy link-FIFO capacity (a dead link has no FIFO).
+    """
     src_tag = np.asarray(src_tag)
     src_dest = np.asarray(src_dest)
     tiles = np.asarray(model.tile_of_cluster)
     n_clusters = tiles.shape[0]
+    if entry_alive is None and getattr(model, "pair_alive", None) is not None:
+        from repro.core.faults import entry_alive_mask
+
+        entry_alive = entry_alive_mask(src_tag, src_dest, cluster_size, model)
     src_ids, e_ids = np.nonzero(src_tag >= 0)
     if src_ids.size == 0:  # entry-less table: one inert pad row
         z = np.zeros(1, np.int32)
@@ -104,6 +120,7 @@ def build_fabric_entries(
             hops=jnp.asarray(z), latency_s=jnp.zeros(1, jnp.float32),
             energy_j=jnp.zeros(1, jnp.float32),
             valid=jnp.asarray(np.zeros(1, bool)),
+            alive=jnp.asarray(np.ones(1, bool)),
         )
     tag = src_tag[src_ids, e_ids].astype(np.int64)
     dst = np.clip(src_dest[src_ids, e_ids], 0, n_clusters - 1).astype(np.int64)
@@ -117,6 +134,11 @@ def build_fabric_entries(
     order = np.lexsort((e_ids, src_ids, link))
     src_s, dst_s, tag_s = src_ids[order], dst[order], tag[order]
     cl_s, link_s, cross_s = src_cl[order], link[order], cross[order]
+    alive_s = (
+        np.ones(src_s.size, bool)
+        if entry_alive is None
+        else np.asarray(entry_alive)[src_ids, e_ids][order]
+    )
     m = src_s.size
     is_start = np.ones(m, bool)
     is_start[1:] = link_s[1:] != link_s[:-1]
@@ -135,6 +157,7 @@ def build_fabric_entries(
             np.asarray(model.energy_j)[cl_s, dst_s].astype(np.float32)
         ),
         valid=jnp.asarray(np.ones(m, bool)),
+        alive=jnp.asarray(alive_s),
     )
 
 
@@ -201,21 +224,28 @@ def fabric_deliver_ring(
         in_q = active & (pos <= cap)
         dropped = jnp.maximum(pos[..., -1] - cap, 0)
 
-    act_e = jnp.take(in_q, entries.src, axis=-1) & entries.valid  # [..., M]
+    act_all = jnp.take(in_q, entries.src, axis=-1) & entries.valid  # [..., M]
+    # fault-severed entries (DESIGN.md §15) always drop — counted with the
+    # link drops (a dead link is a zero-capacity link) — and never contend
+    # for a live link's FIFO slots
+    act_e = act_all & entries.alive
+    fault_dropped = (act_all & ~entries.alive).sum(-1, dtype=jnp.int32)
 
     # per-directed-link FIFO arbitration without a sort: entries are already
     # in the arbiter's scan order, so an active cross-tile entry's FIFO
     # position is the count of active cross-tile entries since its link start
     if link_capacity is None:
         kept = act_e
-        link_dropped = jnp.zeros(batch_shape, jnp.int32)
+        link_dropped = fault_dropped
     else:
         cnt = (act_e & entries.cross).astype(jnp.int32)
         excl = jnp.cumsum(cnt, axis=-1) - cnt
         pos_in_link = excl - jnp.take(excl, entries.link_start, axis=-1)
         keep_cross = pos_in_link < link_capacity
         kept = act_e & (~entries.cross | keep_cross)
-        link_dropped = (act_e & entries.cross & ~keep_cross).sum(-1, dtype=jnp.int32)
+        link_dropped = fault_dropped + (
+            act_e & entries.cross & ~keep_cross
+        ).sum(-1, dtype=jnp.int32)
 
     stats = DeliveryStats(
         dropped=dropped,

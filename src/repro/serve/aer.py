@@ -34,25 +34,37 @@ argmax decision at ``max_steps``.
 from __future__ import annotations
 
 import dataclasses
+import json
 from collections import deque
 
 import numpy as np
 
 from repro.core.cnn import CompiledCnn, poker_neuron_params
 from repro.core.event_engine import EventEngine
-from repro.data.pipeline import DvsStreamSource
+from repro.data.pipeline import DvsStreamConfig, DvsStreamSource
 
 __all__ = [
     "AerServeConfig",
     "DvsSession",
     "SessionResult",
     "AerSessionPool",
+    "PoolFullError",
+    "SlotError",
     "build_poker_engine",
 ]
 
 
+class PoolFullError(RuntimeError):
+    """``admit`` beyond capacity: no free (non-quarantined) slot remains."""
+
+
+class SlotError(ValueError):
+    """A slot operation addressed an invalid target: index out of range,
+    eviction of an unoccupied slot, or quarantine of an occupied one."""
+
+
 def build_poker_engine(
-    tables, backend: str = "reference", donate_carry: bool = True
+    tables, backend: str = "reference", donate_carry: bool = True, faults=None
 ) -> EventEngine:
     """Event engine at the §V serving operating point for a dispatch backend.
 
@@ -74,9 +86,14 @@ def build_poker_engine(
     if backend == "fabric":
         from repro.core.routing import Fabric
 
+        opts = {} if faults is None else {"faults": faults}
         return EventEngine(
             tables, params, queue_capacity=q_cap, fabric=Fabric(),
-            donate_carry=donate_carry,
+            donate_carry=donate_carry, fabric_options=opts,
+        )
+    if faults is not None:
+        raise ValueError(
+            f"fault injection needs the fabric backend, got {backend!r}"
         )
     return EventEngine(
         tables, params, backend=backend, queue_capacity=q_cap,
@@ -150,6 +167,8 @@ class AerSessionPool:
         self.carry = engine.init_state(batch=cfg.pool_size)
         self.slots: list[DvsSession | None] = [None] * cfg.pool_size
         self.n_steps = 0  # engine steps taken (all slots advance together)
+        self.quarantined: set[int] = set()  # slots withdrawn from admission
+        self.last_stats = None  # DeliveryStats of the most recent step()
         self._zero_act = np.zeros(
             (cc.tables.n_clusters, cc.cfg.k_tags), dtype=np.float32
         )
@@ -161,10 +180,30 @@ class AerSessionPool:
 
     @property
     def free_slots(self) -> list[int]:
-        return [i for i, s in enumerate(self.slots) if s is None]
+        return [
+            i
+            for i, s in enumerate(self.slots)
+            if s is None and i not in self.quarantined
+        ]
+
+    def quarantine_slot(self, slot: int) -> None:
+        """Withdraw a free slot from admission (suspected-faulty lane).
+
+        The watchdog (serve/health.py) quarantines a slot whose successive
+        tenants keep faulting — a lane-correlated symptom the per-session
+        retry path cannot fix. Only free slots can be quarantined: evict
+        the tenant first so its result (and the slot reset) happen on the
+        normal path.
+        """
+        if not 0 <= slot < self.cfg.pool_size:
+            raise SlotError(f"slot {slot} out of range")
+        if self.slots[slot] is not None:
+            raise SlotError(f"slot {slot} is occupied; evict before quarantine")
+        self.quarantined.add(slot)
 
     def admit(self, session: DvsSession) -> int:
-        """Claim a free slot for ``session``; raises when the pool is full.
+        """Claim a free slot for ``session``; raises :class:`PoolFullError`
+        when no admissible slot remains (all occupied or quarantined).
 
         The slot's fabric state was wiped at the previous tenant's eviction
         (and is all-zero at construction), so the new tenant starts from
@@ -172,13 +211,38 @@ class AerSessionPool:
         """
         free = self.free_slots
         if not free:
-            raise RuntimeError("session pool is full; evict before admitting")
+            raise PoolFullError(
+                "session pool is full; evict before admitting"
+                if len(self.occupied) == self.cfg.pool_size
+                else "no admissible slot: the pool's free slots are all "
+                "quarantined"
+            )
         slot = free[0]
         session.step = 0
         session.counts = np.zeros(self.n_classes, dtype=np.float64)
         session.dropped = 0
         session.link_dropped = 0
         session.error = None  # a re-admitted session retries with a clean slate
+        self.slots[slot] = session
+        return slot
+
+    def admit_restored(self, session: DvsSession) -> int:
+        """Claim a free slot for a *mid-flight* session without resetting its
+        runtime accumulators — the restore/migration path (DESIGN.md §15).
+
+        The caller owns the matching carry surgery: ``splice_slots`` the
+        session's serialized fabric state into the slot this returns
+        (restore does; a fresh admit must never take this path).
+        """
+        free = self.free_slots
+        if not free:
+            raise PoolFullError("session pool is full; evict before admitting")
+        if session.counts is None:
+            raise ValueError(
+                "admit_restored needs a session with live runtime state — "
+                "use admit() for new sessions"
+            )
+        slot = free[0]
         self.slots[slot] = session
         return slot
 
@@ -205,9 +269,9 @@ class AerSessionPool:
         # freed-but-unreset (the next admit would land on dirty tenant state)
         for slot in slots:
             if not 0 <= slot < self.cfg.pool_size:
-                raise ValueError(f"slot {slot} out of range")
+                raise SlotError(f"slot {slot} out of range")
             if self.slots[slot] is None:
-                raise ValueError(f"slot {slot} is not occupied")
+                raise SlotError(f"slot {slot} is not occupied")
         results = []
         mask = np.zeros(self.cfg.pool_size, dtype=bool)
         for slot in slots:
@@ -263,6 +327,7 @@ class AerSessionPool:
         self.carry, out = self.engine.step(self.carry, inp)
         spikes, stats = out if isinstance(out, tuple) else (out, None)
         spikes = np.asarray(spikes)
+        self.last_stats = stats  # watchdog raw material (serve/health.py)
         self.n_steps += 1
 
         o0, o1 = self.cc.out
@@ -303,6 +368,125 @@ class AerSessionPool:
             for i, s in enumerate(self.slots)
             if s is not None and self._decision(s)[1]
         ]
+
+    # -- checkpoint / restore (DESIGN.md §15) ------------------------------
+    def _session_meta(self, sess: DvsSession) -> dict:
+        src = sess.source
+        if isinstance(src, DvsStreamSource):
+            source = {
+                "kind": "dvs_stream",
+                "cfg": dataclasses.asdict(src.cfg),
+                "session_id": src.session_id,
+            }
+        else:
+            # restore() rebuilds unknown sources via its source_factory
+            source = {"kind": type(src).__name__}
+        return {
+            "session_id": sess.session_id,
+            "label": sess.label,
+            "step": sess.step,
+            "counts": None if sess.counts is None else sess.counts.tolist(),
+            "dropped": sess.dropped,
+            "link_dropped": sess.link_dropped,
+            "error": sess.error,
+            "source": source,
+        }
+
+    def checkpoint(self, ckptr, step: int | None = None, blocking: bool = False):
+        """Snapshot the pool into ``ckptr`` (checkpoint/checkpointer.py).
+
+        One atomic tree: the raw engine carry — neuron state, previous-step
+        spikes, and the complete fabric delay-line state (ring + cursor, or
+        the roll in-flight buffer) — plus every live session's readout
+        accumulators and stream descriptor as a JSON blob. A
+        :class:`DvsStreamSource` is pure in its step counter, so storing
+        ``(cfg, session_id, step)`` replays the exact event stream on
+        restore; a restored pool therefore resumes *bit-exactly* on an
+        engine of the same geometry. ``step`` defaults to ``n_steps``.
+        """
+        meta = {
+            "n_steps": self.n_steps,
+            "pool_size": self.cfg.pool_size,
+            "quarantined": sorted(self.quarantined),
+            "slots": [
+                None if s is None else self._session_meta(s) for s in self.slots
+            ],
+        }
+        blob = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8).copy()
+        tree = {"carry": self.carry, "session_meta": blob}
+        ckptr.save(self.n_steps if step is None else step, tree, blocking=blocking)
+
+    @classmethod
+    def restore(
+        cls,
+        cc: CompiledCnn,
+        engine: EventEngine,
+        cfg: AerServeConfig,
+        ckptr,
+        step: int | None = None,
+        source_factory=None,
+    ) -> "AerSessionPool":
+        """Rebuild a pool from a :meth:`checkpoint` snapshot.
+
+        ``engine`` must have the checkpointed carry's geometry (same
+        neuron/cluster counts and delivery mode — typically the same
+        constructor call as the original); resuming is then bit-exact: the
+        restored pool's future decisions and decision steps match an
+        uninterrupted run. ``step`` defaults to the latest complete
+        checkpoint. Sessions whose source was not a
+        :class:`DvsStreamSource` need ``source_factory(slot_meta) ->
+        source`` to rebuild their stream, otherwise restore raises
+        ``TypeError``.
+        """
+        if step is None:
+            step = ckptr.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no complete checkpoint under {ckptr.dir}"
+                )
+        pool = cls(cc, engine, cfg)
+        like = {"carry": pool.carry, "session_meta": np.zeros(0, np.uint8)}
+        tree = ckptr.restore(step, like)
+        meta = json.loads(
+            np.asarray(tree["session_meta"]).astype(np.uint8).tobytes().decode()
+        )
+        if int(meta["pool_size"]) != cfg.pool_size:
+            raise ValueError(
+                f"checkpoint was taken at pool_size={meta['pool_size']}, "
+                f"restoring into pool_size={cfg.pool_size}"
+            )
+        pool.carry = tree["carry"]
+        pool.n_steps = int(meta["n_steps"])
+        pool.quarantined = set(int(i) for i in meta["quarantined"])
+        for i, sm in enumerate(meta["slots"]):
+            if sm is None:
+                continue
+            src_meta = sm["source"]
+            if src_meta.get("kind") == "dvs_stream":
+                source = DvsStreamSource(
+                    DvsStreamConfig(**src_meta["cfg"]),
+                    session_id=src_meta["session_id"],
+                )
+            elif source_factory is not None:
+                source = source_factory(sm)
+            else:
+                raise TypeError(
+                    f"slot {i}'s source kind {src_meta.get('kind')!r} is not "
+                    "serializable — pass source_factory to rebuild it"
+                )
+            pool.slots[i] = DvsSession(
+                session_id=sm["session_id"],
+                source=source,
+                label=sm["label"],
+                step=int(sm["step"]),
+                counts=None
+                if sm["counts"] is None
+                else np.asarray(sm["counts"], dtype=np.float64),
+                dropped=int(sm["dropped"]),
+                link_dropped=int(sm["link_dropped"]),
+                error=sm["error"],
+            )
+        return pool
 
     # -- drain loop --------------------------------------------------------
     def serve(self, sessions) -> list[SessionResult]:

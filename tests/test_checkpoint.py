@@ -1,0 +1,91 @@
+"""Checkpointer failure paths: async write errors and crash atomicity.
+
+test_train.py covers the happy path (roundtrip, retention, async
+completion); this file covers the two §15 robustness guarantees:
+
+  * an **async** writer failure must not vanish with its worker thread —
+    it is re-raised on the next ``wait()``/``save()``, and the failed
+    attempt leaves no visible ``step_<n>/`` dir and no ``.tmp`` debris;
+  * a crash **mid-write** (after leaves, before the atomic rename) leaves
+    only a ``.tmp`` dir, which ``steps()``/``latest_step()`` ignore, so a
+    restart resumes from the previous complete step.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.checkpoint.checkpointer as ckpt_mod
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(v):
+    return {"a": jnp.full((3,), float(v)), "b": jnp.arange(4) * v}
+
+
+def test_async_write_failure_surfaces_on_wait(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1), blocking=True)
+
+    def _boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_mod.np, "save", _boom)
+    ck.save(2, _tree(2))  # async: the failure lands on the worker thread
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        ck.wait()
+    # the failed attempt is invisible: no step dir, no .tmp debris
+    assert ck.steps() == [1]
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    # the error does not wedge the checkpointer: wait() is clean again...
+    ck.wait()
+    monkeypatch.undo()
+    # ...and the next save works and is restorable
+    ck.save(3, _tree(3))
+    ck.wait()
+    assert ck.latest_step() == 3
+    restored = ck.restore(3, _tree(0))
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.full((3,), 3.0))
+
+
+def test_async_write_failure_surfaces_on_next_save(tmp_path, monkeypatch):
+    """save() joins the outstanding write first, so a failed async write
+    also surfaces on the *next* save call — it can never be lost."""
+    ck = Checkpointer(str(tmp_path))
+    monkeypatch.setattr(ckpt_mod.np, "save", lambda *a, **k: (_ for _ in ()).throw(OSError("boom")))
+    ck.save(1, _tree(1))
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        ck.save(2, _tree(2))  # joins the failed write before snapshotting
+    monkeypatch.undo()
+    ck.save(2, _tree(2), blocking=True)
+    assert ck.steps() == [2]
+
+
+def test_crash_mid_write_leaves_only_tmp_and_resumes(tmp_path, monkeypatch):
+    """Kill the writer between the leaf files and the atomic rename: only
+    step_<n>.tmp exists, the step index never sees it, and a fresh
+    Checkpointer over the same dir restores the previous complete step."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(5), blocking=True)
+
+    def _crash(src, dst):
+        raise KeyboardInterrupt("simulated crash at the rename boundary")
+
+    monkeypatch.setattr(ckpt_mod.os, "rename", _crash)
+    with pytest.raises(KeyboardInterrupt):
+        ck.save(6, _tree(6), blocking=True)
+    monkeypatch.undo()
+    # the half-written snapshot is present on disk but never visible as a step
+    assert (tmp_path / "step_6.tmp").is_dir()
+    assert not (tmp_path / "step_6").exists()
+    survivor = Checkpointer(str(tmp_path))  # "restart"
+    assert survivor.steps() == [5]
+    assert survivor.latest_step() == 5
+    restored = survivor.restore(5, _tree(0))
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.full((3,), 5.0))
+    # a later successful save of the same step clears the stale .tmp
+    survivor.save(6, _tree(6), blocking=True)
+    assert survivor.steps() == [5, 6]
+    assert not (tmp_path / "step_6.tmp").exists()
