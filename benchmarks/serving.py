@@ -147,4 +147,89 @@ def run() -> list[tuple[str, float, str]]:
                 f"acc_{acc:.2f}_drops_{drops}_{len(results) / wall:.1f}sess_s",
             )
         )
+
+    # multi-model residency (DESIGN.md §16): two compiled networks resident
+    # in ONE pool, sessions naming their model at admission. Three rows:
+    # mixed-tenancy throughput, the SpikeHard-style model-load overhead
+    # (load+first-step cost vs a steady-state invocation), and serving
+    # throughput across a hot model load under live sessions.
+    pool_size = pools[0]
+    mm_cfg = AerServeConfig(pool_size=pool_size, max_steps=max_steps)
+
+    def _mixed(n, seed):
+        sessions = _sessions(n, seed=seed)
+        for i, s in enumerate(sessions):
+            s.model = "a" if i % 2 == 0 else "b"
+        return sessions
+
+    pool = AerSessionPool.from_models({"a": cc, "b": cc}, mm_cfg)
+    pool.serve(_mixed(2, seed=5))  # warm the combined-slab step
+    steps0 = pool.n_steps
+    t0 = time.perf_counter()
+    results = pool.serve(_mixed(2 * pool_size, seed=13))
+    wall = time.perf_counter() - t0
+    steps = pool.n_steps - steps0
+    out.append(
+        (
+            f"multimodel_2model_pool{pool_size}",
+            wall / steps * 1e6,
+            f"{len(results) / wall:.1f}sess_s_2models_1engine",
+        )
+    )
+
+    single = AerSessionPool.from_models({"a": cc}, mm_cfg)
+    single.serve(_sessions(1, seed=5))  # warm the 1-model step
+    t0 = time.perf_counter()
+    single.load_model("b", cc)
+    single.step()  # first post-load step compiles the grown engine
+    load_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    n_probe = 5
+    for _ in range(n_probe):
+        single.step()
+    step_s = (time.perf_counter() - t0) / n_probe
+    out.append(
+        (
+            "multimodel_load_overhead",
+            load_s * 1e6,
+            f"load_{load_s * 1e3:.0f}ms_vs_step_{step_s * 1e6:.0f}us_"
+            f"{load_s / step_s:.0f}x",
+        )
+    )
+
+    # swap under load: sessions on model a are mid-flight when model b is
+    # hot-loaded; every in-flight session finishes and b's tenants follow
+    from collections import deque
+
+    swap = AerSessionPool.from_models({"a": cc}, mm_cfg)
+    warm = _sessions(2, seed=5)
+    for s in warm:
+        s.model = "a"
+    swap.serve(warm)
+    traffic = _sessions(2 * pool_size, seed=17)
+    for i, s in enumerate(traffic):
+        s.model = "a" if i < pool_size else "b"
+    pending = deque(traffic)
+    done: list = []
+    steps0 = swap.n_steps
+    t0 = time.perf_counter()
+    while pending or swap.occupied:
+        if pending and pending[0].model not in swap.models:
+            swap.load_model(pending[0].model, cc)  # hot load, live sessions
+        while pending and swap.free_slots and pending[0].model in swap.models:
+            swap.admit(pending.popleft())
+        swap.step()
+        fin = swap.finished_slots()
+        if fin:
+            done.extend(swap.evict_many(fin))
+    wall = time.perf_counter() - t0
+    steps = swap.n_steps - steps0
+    assert len(done) == len(traffic), "swap-under-load lost sessions"
+    out.append(
+        (
+            f"multimodel_swap_pool{pool_size}",
+            wall / steps * 1e6,
+            f"{len(done) / wall:.1f}sess_s_across_hot_load",
+        )
+    )
     return out

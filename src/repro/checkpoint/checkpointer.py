@@ -147,11 +147,26 @@ class Checkpointer:
         path = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        keys, _, treedef = _flatten(like)
+        keys, proto, treedef = _flatten(like)
         by_key = {e["key"]: e for e in manifest["leaves"]}
         arrays = []
-        for k in keys:
+        for k, p in zip(keys, proto):
+            if k not in by_key:
+                raise ValueError(
+                    f"checkpoint step {step} has no leaf {k!r} — the saved "
+                    "tree's structure differs from the restore prototype"
+                )
             e = by_key[k]
+            # a silent shape mismatch would splice another geometry's state
+            # into the caller's tree; fixed-size prototypes must match
+            # exactly (variable-length leaves opt out with a 0-size proto)
+            want = tuple(np.shape(p))
+            got = tuple(e["shape"])
+            if want != got and np.size(p) != 0:
+                raise ValueError(
+                    f"checkpoint step {step} leaf {k!r} has shape {got}, "
+                    f"restore prototype expects {want}"
+                )
             arrays.append(_decode(np.load(os.path.join(path, e["file"])), e["dtype"]))
         tree = jax.tree.unflatten(treedef, arrays)
         if shardings is not None:

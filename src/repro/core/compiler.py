@@ -52,7 +52,10 @@ DESIGN.md §11) enforces — optimized placements then run multi-device as-is.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
+import os
 from typing import Sequence
 
 import numpy as np
@@ -68,6 +71,10 @@ from repro.core.tags import (
 __all__ = [
     "CompileReport",
     "CompileResult",
+    "Geometry",
+    "FeasibilityReport",
+    "InfeasibleGeometryError",
+    "CompiledArtifact",
     "allocate_tags_reuse",
     "traffic_matrix",
     "placement_cost",
@@ -75,6 +82,8 @@ __all__ = [
     "repair_placement",
     "build_report",
     "compile_network_v2",
+    "artifact_from_tables",
+    "retarget",
 ]
 
 
@@ -636,3 +645,463 @@ def compile_network_v2(
         tables = dataclasses.replace(tables, tile_of_cluster=placement)
     report = build_report(spec, tables, fabric=fabric, rates=rates)
     return CompileResult(tables=tables, report=report)
+
+
+# ---------------------------------------------------------------------------
+# compiled-network artifacts + geometry retargeting (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """A target hardware geometry: mesh extent, core layout, memory budgets.
+
+    The paper's prototype fixes (3x3 chips, 4 cores/chip, 256 neurons/core,
+    K = 1024, 64 CAM words, 16 SRAM entries) — those are the defaults here.
+    :func:`retarget` recompiles a :class:`~repro.core.tags.NetworkSpec` to
+    any other point of this space and reports which of eq. (2)'s budgets
+    binds first.
+    """
+
+    grid_x: int = 3
+    grid_y: int = 3
+    cores_per_tile: int = 4
+    neurons_per_core: int = 256  # cluster_size: cluster <-> core is 1:1
+    k_tags: int = 1024
+    max_cam_words: int = 64
+    max_sram_entries: int = 16
+
+    @property
+    def n_tiles(self) -> int:
+        return self.grid_x * self.grid_y
+
+    @property
+    def n_cores(self) -> int:
+        return self.n_tiles * self.cores_per_tile
+
+    @property
+    def capacity(self) -> int:
+        """Total neuron slots the geometry can host."""
+        return self.n_cores * self.neurons_per_core
+
+    def fabric(self):
+        """The equivalent executable :class:`~repro.core.routing.Fabric`."""
+        from repro.core.routing import Fabric
+
+        return Fabric(
+            grid_x=self.grid_x,
+            grid_y=self.grid_y,
+            cores_per_tile=self.cores_per_tile,
+            neurons_per_core=self.neurons_per_core,
+        )
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class FeasibilityReport:
+    """Which resource budget binds a network on a geometry (per eq. (2)).
+
+    ``utilization`` maps each constraint to its fraction of budget used:
+    ``"tags"`` (max per-cluster distinct routed tags / K), ``"cam"`` (max
+    CAM words per neuron / budget), ``"sram"`` (max SRAM entries per neuron
+    / budget), ``"cores"`` (clusters / cores), and ``"link"`` (peak expected
+    per-step directed-link load / link FIFO capacity, under the given
+    rates). ``binding`` names the constraint with the highest utilization —
+    on an infeasible geometry, the one that overflowed.
+    """
+
+    feasible: bool
+    binding: str
+    utilization: dict
+    detail: str = ""
+
+    def asdict(self) -> dict:
+        return {
+            "feasible": self.feasible,
+            "binding": self.binding,
+            "utilization": {k: float(v) for k, v in self.utilization.items()},
+            "detail": self.detail,
+        }
+
+
+class InfeasibleGeometryError(ValueError):
+    """A network does not fit a target geometry; ``.report`` names the
+    binding constraint (:class:`FeasibilityReport` with ``feasible=False``)."""
+
+    def __init__(self, message: str, report: FeasibilityReport):
+        super().__init__(message)
+        self.report = report
+
+
+def _tags_used_per_cluster(tables: RoutingTables) -> np.ndarray:
+    """Distinct routed (cluster, tag) pairs per destination cluster."""
+    src_tag = np.asarray(tables.src_tag)
+    src_dest = np.asarray(tables.src_dest)
+    src, ent = np.nonzero(src_tag >= 0)
+    if src.size == 0:
+        return np.zeros(tables.n_clusters, dtype=np.int64)
+    span = int(max(tables.k_tags, src_tag.max(initial=0) + 1))
+    codes = src_dest[src, ent].astype(np.int64) * span + src_tag[src, ent]
+    return np.bincount(
+        np.unique(codes) // span, minlength=tables.n_clusters
+    ).astype(np.int64)
+
+
+def _link_peak_load(
+    tables: RoutingTables,
+    geometry: Geometry,
+    placement: np.ndarray,
+    rates: np.ndarray | None,
+) -> float:
+    """Peak expected per-step load on any directed inter-tile link."""
+    t = traffic_matrix(tables, rates)
+    p = np.asarray(placement, dtype=np.int64)
+    nt = geometry.n_tiles
+    pair = p[:, None] * nt + p[None, :]
+    loads = np.bincount(
+        pair.ravel(), weights=t.ravel(), minlength=nt * nt
+    ).reshape(nt, nt)
+    np.fill_diagonal(loads, 0.0)  # intra-tile traffic never touches a link
+    return float(loads.max(initial=0.0))
+
+
+def _feasibility(
+    tables: RoutingTables,
+    geometry: Geometry,
+    placement: np.ndarray | None,
+    rates: np.ndarray | None,
+    dt: float,
+) -> FeasibilityReport:
+    """Measure a compiled table against a geometry's budgets."""
+    src_tag = np.asarray(tables.src_tag)
+    cam_tag = np.asarray(tables.cam_tag)
+    # tag *values* must be addressable in the geometry's [0, K) space —
+    # spliced external tags (cnn.py input taps) count like any other
+    tag_span = int(
+        max(src_tag.max(initial=-1), cam_tag.max(initial=-1)) + 1
+    )
+    util = {
+        "tags": max(
+            int(_tags_used_per_cluster(tables).max(initial=0)), tag_span
+        ) / geometry.k_tags,
+        "cam": int((cam_tag >= 0).sum(1).max(initial=0)) / geometry.max_cam_words,
+        "sram": int((src_tag >= 0).sum(1).max(initial=0))
+        / geometry.max_sram_entries,
+        "cores": tables.n_clusters / geometry.n_cores,
+    }
+    if placement is not None:
+        from repro.core.routing import build_delivery_model
+
+        model = build_delivery_model(
+            geometry.fabric(), tables.n_clusters, dt, tile_of_cluster=placement
+        )
+        util["link"] = (
+            _link_peak_load(tables, geometry, placement, rates)
+            / model.link_capacity
+        )
+    hard = ("tags", "cam", "sram", "cores")
+    feasible = all(util[k] <= 1.0 for k in hard)
+    binding = max(util, key=util.get)
+    over = [k for k in hard if util[k] > 1.0]
+    detail = (
+        f"over budget: {', '.join(over)}"
+        if over
+        else f"tightest budget: {binding} at {util[binding]:.0%}"
+    )
+    return FeasibilityReport(
+        feasible=feasible, binding=binding, utilization=util, detail=detail
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledArtifact:
+    """A self-contained, serializable compiled network (DESIGN.md §16).
+
+    The unit of loading for multi-model serving: routing tables (with the
+    physical placement stamped in), the geometry they were compiled for, a
+    :class:`FeasibilityReport` naming the binding budget, and optionally the
+    :class:`CompileReport`. ``fingerprint()`` identifies the artifact
+    content-exactly; the fabric entry table is a pure function of the
+    tables + geometry and is reconstructed deterministically by
+    :meth:`entry_table` rather than stored.
+    """
+
+    tables: RoutingTables
+    geometry: Geometry
+    feasibility: FeasibilityReport
+    report: CompileReport | None = None
+
+    def fingerprint(self) -> str:
+        h = hashlib.sha256()
+        h.update(json.dumps(self.geometry.asdict(), sort_keys=True).encode())
+        h.update(self.tables.fingerprint().encode())
+        return h.hexdigest()
+
+    def entry_table(self, dt: float = 1e-3):
+        """Deterministically rebuild the static fabric entry table
+        (:class:`~repro.kernels.fabric_deliver.ops.FabricEntries`)."""
+        from repro.core.routing import build_delivery_model, default_tile_of_cluster
+        from repro.kernels.fabric_deliver.ops import build_fabric_entries
+
+        t = self.tables
+        fab = self.geometry.fabric()
+        placement = t.tile_of_cluster
+        if placement is None:
+            placement = default_tile_of_cluster(t.n_clusters, fab)
+        model = build_delivery_model(
+            fab, t.n_clusters, dt, tile_of_cluster=placement
+        )
+        return build_fabric_entries(
+            t.src_tag, t.src_dest, t.cluster_size, t.k_tags, model
+        )
+
+    # -- serialization ------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Write the artifact under directory ``path`` (created if needed):
+        ``tables.npz`` holds every array, ``artifact.json`` the metadata and
+        the content fingerprint (verified on :meth:`load`)."""
+        os.makedirs(path, exist_ok=True)
+        t = self.tables
+        arrays = {
+            "src_tag": np.asarray(t.src_tag),
+            "src_dest": np.asarray(t.src_dest),
+            "cam_tag": np.asarray(t.cam_tag),
+            "cam_syn": np.asarray(t.cam_syn),
+        }
+        if t.tile_of_cluster is not None:
+            arrays["tile_of_cluster"] = np.asarray(t.tile_of_cluster)
+        rep_meta = None
+        if self.report is not None:
+            r = self.report
+            for k in ("tags_used", "tags_v1", "sram_fill", "cam_fill"):
+                arrays[f"report_{k}"] = np.asarray(getattr(r, k))
+            if r.tile_of_cluster is not None:
+                arrays["report_tile_of_cluster"] = np.asarray(r.tile_of_cluster)
+            rep_meta = {
+                "k_tags": r.k_tags,
+                "cluster_size": r.cluster_size,
+                "sram_bits": r.sram_bits,
+                "cam_bits": r.cam_bits,
+                "eq2_bits_per_neuron": r.eq2_bits_per_neuron,
+                "measured_bits_per_neuron": r.measured_bits_per_neuron,
+                "mean_hops": r.mean_hops,
+            }
+        np.savez(os.path.join(path, "tables.npz"), **arrays)
+        meta = {
+            "format": 1,
+            "geometry": self.geometry.asdict(),
+            "cluster_size": t.cluster_size,
+            "k_tags": t.k_tags,
+            "feasibility": self.feasibility.asdict(),
+            "report": rep_meta,
+            "fingerprint": self.fingerprint(),
+        }
+        with open(os.path.join(path, "artifact.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CompiledArtifact":
+        """Read an artifact saved by :meth:`save`; raises ``ValueError`` when
+        the stored fingerprint does not match the loaded content."""
+        with open(os.path.join(path, "artifact.json")) as f:
+            meta = json.load(f)
+        with np.load(os.path.join(path, "tables.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        tables = RoutingTables(
+            src_tag=arrays["src_tag"],
+            src_dest=arrays["src_dest"],
+            cam_tag=arrays["cam_tag"],
+            cam_syn=arrays["cam_syn"],
+            cluster_size=int(meta["cluster_size"]),
+            k_tags=int(meta["k_tags"]),
+            tile_of_cluster=arrays.get("tile_of_cluster"),
+        )
+        report = None
+        if meta["report"] is not None:
+            rm = meta["report"]
+            report = CompileReport(
+                k_tags=int(rm["k_tags"]),
+                cluster_size=int(rm["cluster_size"]),
+                tags_used=arrays["report_tags_used"],
+                tags_v1=arrays["report_tags_v1"],
+                sram_fill=arrays["report_sram_fill"],
+                cam_fill=arrays["report_cam_fill"],
+                sram_bits=int(rm["sram_bits"]),
+                cam_bits=int(rm["cam_bits"]),
+                eq2_bits_per_neuron=float(rm["eq2_bits_per_neuron"]),
+                measured_bits_per_neuron=float(rm["measured_bits_per_neuron"]),
+                mean_hops=None if rm["mean_hops"] is None else float(rm["mean_hops"]),
+                tile_of_cluster=arrays.get("report_tile_of_cluster"),
+            )
+        fz = meta["feasibility"]
+        art = cls(
+            tables=tables,
+            geometry=Geometry(**meta["geometry"]),
+            feasibility=FeasibilityReport(
+                feasible=bool(fz["feasible"]),
+                binding=str(fz["binding"]),
+                utilization=dict(fz["utilization"]),
+                detail=str(fz.get("detail", "")),
+            ),
+            report=report,
+        )
+        if art.fingerprint() != meta["fingerprint"]:
+            raise ValueError(
+                f"artifact at {path} is corrupt: content fingerprint "
+                f"{art.fingerprint()[:12]}... does not match the recorded "
+                f"{meta['fingerprint'][:12]}..."
+            )
+        return art
+
+
+def artifact_from_tables(
+    tables: RoutingTables | CompileResult,
+    geometry: Geometry,
+    *,
+    spec: NetworkSpec | None = None,
+    rates: np.ndarray | None = None,
+    seed: int = 0,
+    anneal_steps: int | None = None,
+    optimize: bool = True,
+    dt: float = 1e-3,
+) -> CompiledArtifact:
+    """Bind already-compiled tables to a geometry (placement-only retarget).
+
+    The path for networks whose tables were post-processed after compilation
+    (e.g. the poker CNN's spliced input taps, which a recompile would lose):
+    budgets are validated against ``geometry``, a placement on its fabric is
+    kept if the compiled one fits, else re-derived (traffic-optimized when
+    ``optimize``), and the feasibility report is measured from the tables as
+    they are. Raises :class:`InfeasibleGeometryError` when a hard budget
+    (tags / CAM / SRAM / cores) overflows. ``spec`` additionally attaches a
+    fresh :class:`CompileReport`.
+    """
+    report = None
+    if isinstance(tables, CompileResult):
+        tables, report = tables.tables, tables.report
+    if tables.cluster_size != geometry.neurons_per_core:
+        raise InfeasibleGeometryError(
+            f"tables were compiled at cluster_size={tables.cluster_size} but "
+            f"the geometry hosts {geometry.neurons_per_core} neurons/core — "
+            "recompile with retarget() to re-cluster",
+            FeasibilityReport(
+                feasible=False,
+                binding="cores",
+                utilization={"cores": float("inf")},
+                detail="cluster_size != neurons_per_core",
+            ),
+        )
+    fz = _feasibility(tables, geometry, None, rates, dt)
+    if not fz.feasible:
+        raise InfeasibleGeometryError(
+            f"network does not fit geometry ({fz.detail}); binding "
+            f"constraint: {fz.binding}",
+            fz,
+        )
+    fab = geometry.fabric()
+    placement = tables.tile_of_cluster
+    if placement is not None:
+        from repro.core.routing import validate_placement
+
+        try:
+            placement = validate_placement(fab, tables.n_clusters, placement)
+        except ValueError:
+            placement = None  # compiled for another fabric: re-place
+    if placement is None:
+        if optimize:
+            placement, _ = optimize_placement(
+                traffic_matrix(tables, rates),
+                fab,
+                seed=seed,
+                anneal_steps=anneal_steps,
+            )
+        else:
+            from repro.core.routing import default_tile_of_cluster
+
+            placement = default_tile_of_cluster(tables.n_clusters, fab)
+    tables = dataclasses.replace(tables, tile_of_cluster=placement)
+    fz = _feasibility(tables, geometry, placement, rates, dt)
+    if spec is not None:
+        report = build_report(spec, tables, fabric=fab, rates=rates)
+    return CompiledArtifact(
+        tables=tables, geometry=geometry, feasibility=fz, report=report
+    )
+
+
+def retarget(
+    spec: NetworkSpec,
+    geometry: Geometry,
+    *,
+    allocator: str = "reuse",
+    rates: np.ndarray | None = None,
+    seed: int = 0,
+    anneal_steps: int | None = None,
+    optimize: bool = True,
+    dt: float = 1e-3,
+) -> CompiledArtifact:
+    """Recompile ``spec`` to an arbitrary geometry (DESIGN.md §16).
+
+    Re-clusters the network at the geometry's ``neurons_per_core`` (padding
+    the neuron count up to a whole number of cores — pad neurons are
+    unconnected and silent, so the dense-equivalent connectivity is
+    preserved bit-exactly), re-allocates tags under the geometry's K /
+    CAM / SRAM budgets, places the clusters on the geometry's mesh, and
+    returns a :class:`CompiledArtifact` whose feasibility report names the
+    binding constraint. An overflowing budget raises
+    :class:`InfeasibleGeometryError` with the same report attached.
+    """
+    cs = geometry.neurons_per_core
+    n_padded = -(-spec.n_neurons // cs) * cs
+    if n_padded > geometry.capacity:
+        raise InfeasibleGeometryError(
+            f"{spec.n_neurons} neurons need {n_padded // cs} cores; the "
+            f"geometry has {geometry.n_cores} (binding constraint: cores)",
+            FeasibilityReport(
+                feasible=False,
+                binding="cores",
+                utilization={"cores": (n_padded // cs) / geometry.n_cores},
+                detail=f"{n_padded // cs} clusters > {geometry.n_cores} cores",
+            ),
+        )
+    respec = NetworkSpec(
+        n_neurons=n_padded,
+        cluster_size=cs,
+        k_tags=geometry.k_tags,
+        max_cam_words=geometry.max_cam_words,
+        max_sram_entries=geometry.max_sram_entries,
+    )
+    # re-register every group: neuron ids are geometry-invariant, but
+    # connect_group buckets targets by DESTINATION CLUSTER at insertion
+    # time, so the groups must re-bucket at the new cluster size
+    for srcs, by_cluster, shared, copies in spec._groups:
+        tgts = [t for cl in sorted(by_cluster) for t in by_cluster[cl]]
+        respec.connect_group(srcs, tgts, shared_tag=shared, copies=copies)
+    try:
+        tables = compile_network(respec, allocator=allocator)
+    except ValueError as e:
+        msg = str(e)
+        binding = "tags"
+        if "max_cam_words" in msg:
+            binding = "cam"
+        elif "max_sram_entries" in msg:
+            binding = "sram"
+        raise InfeasibleGeometryError(
+            f"network does not fit geometry: {msg}",
+            FeasibilityReport(
+                feasible=False,
+                binding=binding,
+                utilization={binding: float("inf")},
+                detail=msg,
+            ),
+        ) from e
+    return artifact_from_tables(
+        tables,
+        geometry,
+        spec=respec,
+        rates=rates,
+        seed=seed,
+        anneal_steps=anneal_steps,
+        optimize=optimize,
+        dt=dt,
+    )

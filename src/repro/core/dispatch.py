@@ -517,6 +517,25 @@ class FabricBackend(DispatchBackend):
             src_tag, src_dest, cluster_size, k_tags, model
         )
 
+    def build_entries_slabs(
+        self, per_model, cluster_size: int, k_tags: int
+    ):
+        """Multi-model entry table as slab-offset concatenation (§16).
+
+        ``per_model`` is a sequence of per-resident ``(src_tag, src_dest)``
+        pairs laid out back to back; the combined cluster count is derived
+        from the total neuron count. Bit-identical to :meth:`build_entries`
+        on the concatenated tables — see
+        kernels/fabric_deliver/ops.build_fabric_entries_slabs.
+        """
+        from repro.kernels.fabric_deliver import ops as fabric_ops
+
+        n_total = sum(np.asarray(st).shape[0] for st, _ in per_model)
+        model, _ = self.model_for(n_total // cluster_size)
+        return fabric_ops.build_fabric_entries_slabs(
+            per_model, cluster_size, k_tags, model
+        )
+
     def entry_alive_for(self, src_tag, src_dest, cluster_size: int):
         """Per-SRAM-entry survival mask ``[N, E]`` (bool) or ``None``.
 

@@ -58,6 +58,7 @@ own neuron slab (one output FIFO per core, like the chip).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +80,10 @@ __all__ = [
     "EventEngine",
     "DeliveryStats",
     "SlotCarry",
+    "ModelRegistry",
     "reset_slots",
+    "slice_slot_carry",
+    "embed_slot_carry",
     "dense_weights_from_tables",
     "dense_reference_step",
 ]
@@ -143,6 +147,7 @@ class EventEngine:
         donate_carry: bool = False,
         fabric=None,  # routing.Fabric | dispatch.FabricBackend | None
         fabric_options: dict | None = None,
+        entry_slabs=None,  # multi-model ring fast path: [(src_tag_m, src_dest_m)]
     ):
         # a compiler-v2 CompileResult (core/compiler.py) carries the tables
         # plus a CompileReport; unwrap it so optimized placements flow
@@ -230,8 +235,27 @@ class EventEngine:
         )
         self._fabric_entries = None
         if self.fabric_ring:
-            self._fabric_entries = self.fabric_backend.build_entries(
-                tables.src_tag, tables.src_dest, self.cluster_size, self.k_tags
+            if entry_slabs is not None:
+                # multi-model residency (DESIGN.md §16): the static entry
+                # table is assembled slab-by-slab with slab-offset
+                # addressing — bit-identical to building from the
+                # concatenated table (tests/test_multimodel.py locks it)
+                n_total = sum(np.asarray(st).shape[0] for st, _ in entry_slabs)
+                if n_total != self.n_neurons:
+                    raise ValueError(
+                        f"entry_slabs span {n_total} neurons, tables have "
+                        f"{self.n_neurons}"
+                    )
+                self._fabric_entries = self.fabric_backend.build_entries_slabs(
+                    entry_slabs, self.cluster_size, self.k_tags
+                )
+            else:
+                self._fabric_entries = self.fabric_backend.build_entries(
+                    tables.src_tag, tables.src_dest, self.cluster_size, self.k_tags
+                )
+        elif entry_slabs is not None:
+            raise ValueError(
+                "entry_slabs only applies to the fabric ring fast path"
             )
         # per-engine compiled step (self is closed over = static). Carry
         # donation is opt-in: with donate_carry=True on an accelerator the
@@ -373,6 +397,13 @@ class EventEngine:
     def _reset_impl(self, carry, mask):
         if mask.ndim < 1:
             raise ValueError("reset_slots needs a batched carry (mask per slot)")
+        lead = tuple(carry[1].shape[: mask.ndim])
+        if tuple(mask.shape) != lead:
+            raise ValueError(
+                f"reset mask shape {tuple(mask.shape)} does not match the "
+                f"carry's slot dims {lead} — a mis-sized mask must raise, "
+                "not broadcast (it would wipe the wrong tenants)"
+            )
         fresh = self.init_state(batch=mask.shape)
         return reset_slots(carry, mask, fresh)
 
@@ -452,12 +483,19 @@ class EventEngine:
                 f"SlotCarry has {sp.shape[-1]} neurons, engine has "
                 f"{self.n_neurons}"
             )
+        def _checked_set(cur, new):
+            new = jnp.asarray(new, cur.dtype)
+            want = (idx.size, *cur.shape[1:])
+            if tuple(new.shape) != want:
+                raise ValueError(
+                    f"SlotCarry state leaf shape {tuple(new.shape)} != "
+                    f"expected {want} — a mismatched leaf must raise, not "
+                    "broadcast into the pool"
+                )
+            return cur.at[jidx].set(new)
+
         jidx = jnp.asarray(idx)
-        state = jax.tree_util.tree_map(
-            lambda cur, new: cur.at[jidx].set(jnp.asarray(new, cur.dtype)),
-            carry[0],
-            sc.state,
-        )
+        state = jax.tree_util.tree_map(_checked_set, carry[0], sc.state)
         spikes = spikes_t.at[jidx].set(jnp.asarray(sp, spikes_t.dtype))
         if self.fabric_backend is None:
             if sc.inflight is not None and np.any(np.asarray(sc.inflight)):
@@ -806,10 +844,193 @@ def reset_slots(carry, mask: jax.Array, fresh):
     def sel(cur, new):
         if cur.ndim < mask.ndim:
             return cur
+        if tuple(cur.shape[: mask.ndim]) != tuple(mask.shape):
+            raise ValueError(
+                f"mask shape {tuple(mask.shape)} does not match carry leaf "
+                f"slot dims {tuple(cur.shape[: mask.ndim])} — refusing to "
+                "broadcast a mis-sized mask across slots"
+            )
         m = mask.reshape(mask.shape + (1,) * (cur.ndim - mask.ndim))
         return jnp.where(m, jnp.asarray(new, cur.dtype), cur)
 
     return jax.tree_util.tree_map(sel, carry, fresh)
+
+
+# ---------------------------------------------------------------------------
+# Multi-model residency (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+def slice_slot_carry(sc: SlotCarry, slab) -> SlotCarry:
+    """Restrict a :class:`SlotCarry` to one resident model's table slab.
+
+    ``slab`` is a :class:`repro.core.tags.TableSlab`. Neuron-state leaves
+    carry the neuron axis at position 1 (``[S, N]`` / ``[S, N, 4]``), so one
+    slice serves all of them; the in-flight buffer is cut on the cluster
+    axis and narrowed to the slab's own ``k_tags`` — the combined engine may
+    pad K up to the widest resident model, and tag activity a model never
+    compiled is structurally zero in its slab.
+    """
+    n0, n1 = slab.neuron_lo, slab.neuron_hi
+    state = jax.tree_util.tree_map(lambda x: np.asarray(x)[:, n0:n1], sc.state)
+    spikes = np.asarray(sc.spikes)[:, n0:n1]
+    inflight = None
+    if sc.inflight is not None:
+        inflight = np.asarray(sc.inflight)[
+            :, :, slab.cluster_lo : slab.cluster_hi, : slab.k_tags
+        ]
+    return SlotCarry(state=state, spikes=spikes, inflight=inflight)
+
+
+def embed_slot_carry(sc_slab: SlotCarry, engine: "EventEngine", slab) -> SlotCarry:
+    """Embed a slab-restricted :class:`SlotCarry` into ``engine``'s geometry.
+
+    The inverse of :func:`slice_slot_carry` for migration onto a pool whose
+    slab layout moved (hot-swap of a co-resident model). The base is the
+    engine's *fresh* init — not zeros: a zeroed membrane (``v = 0``) sits at
+    the firing threshold and every neuron outside the slab would spike on
+    the first step. The returned in-flight buffer keeps the source horizon
+    ``D_src``; :meth:`EventEngine.splice_slots` re-buckets it to the target
+    engine's ``max_delay`` and re-rotates the ring phase.
+    """
+    part = np.asarray(sc_slab.spikes)
+    s = part.shape[0]
+    if part.shape[-1] != slab.n_neurons:
+        raise ValueError(
+            f"SlotCarry holds {part.shape[-1]} neurons but the slab spans "
+            f"{slab.n_neurons}"
+        )
+    base = engine.extract_slots(engine.init_state(batch=s), np.arange(s))
+    n0, n1 = slab.neuron_lo, slab.neuron_hi
+
+    def put(full, p):
+        full = np.array(full)
+        full[:, n0:n1] = p
+        return full
+
+    state = jax.tree_util.tree_map(put, base.state, sc_slab.state)
+    spikes = put(base.spikes, part)
+    inflight = None
+    if engine.fabric_backend is not None:
+        if sc_slab.inflight is None:
+            inflight = base.inflight
+        else:
+            src = np.asarray(sc_slab.inflight)
+            if src.shape[-2:] != (slab.n_clusters, slab.k_tags):
+                raise ValueError(
+                    f"SlotCarry in-flight grid {src.shape[-2:]} != slab "
+                    f"({slab.n_clusters}, {slab.k_tags})"
+                )
+            if slab.k_tags > engine.k_tags:
+                raise ValueError(
+                    f"slab k_tags {slab.k_tags} exceeds engine K {engine.k_tags}"
+                )
+            inflight = np.zeros(
+                (s, src.shape[1], engine.n_clusters, engine.k_tags), np.float32
+            )
+            inflight[
+                :, :, slab.cluster_lo : slab.cluster_hi, : slab.k_tags
+            ] = src
+    elif sc_slab.inflight is not None and np.any(sc_slab.inflight):
+        raise ValueError(
+            "SlotCarry holds in-flight fabric events but the target engine "
+            "has no fabric delay line to receive them"
+        )
+    return SlotCarry(state=state, spikes=spikes, inflight=inflight)
+
+
+class ModelRegistry:
+    """Ordered set of resident compiled networks sharing ONE engine (§16).
+
+    Each model keeps its own :class:`RoutingTables`; :meth:`combined`
+    concatenates them into disjoint neuron/cluster slabs (tag values need no
+    rebasing — ``(cluster, tag)`` is the routed address and clusters are
+    rebased by :func:`repro.core.tags.concat_tables`). The slab layout is
+    insertion-ordered, so *which models are resident, in which order* is the
+    whole identity of the combined engine — :meth:`fingerprint` hashes
+    exactly that, and checkpoint restore compares it.
+    """
+
+    def __init__(self, models=None):
+        self._models: dict[str, RoutingTables] = {}
+        if models:
+            for name, tables in models.items():
+                self.load(name, tables)
+
+    @staticmethod
+    def _unwrap(tables) -> RoutingTables:
+        # accept CompileResult / CompiledArtifact / CompiledCnn wrappers
+        while hasattr(tables, "tables"):
+            tables = tables.tables
+        return tables
+
+    def load(self, name: str, tables) -> None:
+        if name in self._models:
+            raise ValueError(f"model {name!r} already resident")
+        tables = self._unwrap(tables)
+        for other_name, other in self._models.items():
+            if other.cluster_size != tables.cluster_size:
+                raise ValueError(
+                    f"model {name!r} cluster_size {tables.cluster_size} != "
+                    f"resident {other_name!r} cluster_size {other.cluster_size}"
+                )
+        self._models[name] = tables
+
+    def unload(self, name: str) -> None:
+        if name not in self._models:
+            raise KeyError(f"model {name!r} is not resident")
+        del self._models[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+    def __len__(self) -> int:
+        return len(self._models)
+
+    @property
+    def names(self) -> list[str]:
+        return list(self._models)
+
+    def tables_of(self, name: str) -> RoutingTables:
+        return self._models[name]
+
+    def slabs(self) -> dict:
+        """Slab layout by model name, insertion-ordered (no concat needed)."""
+        from repro.core.tags import TableSlab
+
+        out, n0, c0 = {}, 0, 0
+        for name, t in self._models.items():
+            out[name] = TableSlab(
+                neuron_lo=n0,
+                neuron_hi=n0 + t.n_neurons,
+                cluster_lo=c0,
+                cluster_hi=c0 + t.n_clusters,
+                k_tags=t.k_tags,
+            )
+            n0 += t.n_neurons
+            c0 += t.n_clusters
+        return out
+
+    def combined(self) -> tuple[RoutingTables, dict]:
+        """(combined tables, slab layout by name). Single resident model
+        returns its tables untouched, so a registry-of-one is free."""
+        from repro.core.tags import concat_tables
+
+        if not self._models:
+            raise ValueError("registry holds no resident models")
+        names = list(self._models)
+        if len(names) == 1:
+            return self._models[names[0]], self.slabs()
+        tables, slab_list = concat_tables(list(self._models.values()))
+        return tables, dict(zip(names, slab_list))
+
+    def fingerprint(self) -> str:
+        """sha256 over (name, table fingerprint) pairs in slab order."""
+        h = hashlib.sha256()
+        for name, t in self._models.items():
+            h.update(name.encode())
+            h.update(b"\x00")
+            h.update(t.fingerprint().encode())
+            h.update(b"\x01")
+        return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------

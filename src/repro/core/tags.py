@@ -27,6 +27,7 @@ for the JAX event engine / Pallas CAM kernel.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import defaultdict
 from itertools import groupby
 from typing import TYPE_CHECKING, Iterable, Sequence
@@ -40,9 +41,11 @@ __all__ = [
     "SynapseType",
     "NetworkSpec",
     "RoutingTables",
+    "TableSlab",
     "AllocUnit",
     "expand_units",
     "compile_network",
+    "concat_tables",
 ]
 
 
@@ -157,6 +160,29 @@ class RoutingTables:
         ent = int((self.cam_tag >= 0).sum())
         return ent * (int(np.ceil(np.log2(max(2, self.k_tags)))) + 2)
 
+    def fingerprint(self) -> str:
+        """Content hash of the compiled routing state (DESIGN.md §16).
+
+        Covers every field that determines delivery semantics: the four
+        tables (values and shapes), the cluster/tag geometry, and the
+        physical placement. Two tables with equal fingerprints produce
+        bit-identical delivery; a checkpoint stamped with this hash can be
+        refused when restored against a retargeted engine
+        (serve.aer.CheckpointMismatchError).
+        """
+        h = hashlib.sha256()
+        h.update(f"C{self.cluster_size}K{self.k_tags}".encode())
+        for a in (self.src_tag, self.src_dest, self.cam_tag, self.cam_syn):
+            a = np.ascontiguousarray(np.asarray(a, dtype=np.int64))
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        if self.tile_of_cluster is not None:
+            p = np.ascontiguousarray(
+                np.asarray(self.tile_of_cluster, dtype=np.int64)
+            )
+            h.update(b"P" + p.tobytes())
+        return h.hexdigest()
+
     def dense_equivalent(self) -> np.ndarray:
         """Reference fan-out expansion: [n_connections, 3] rows (src, dst, syn).
 
@@ -182,6 +208,101 @@ class RoutingTables:
                 for j, syn in subs[(cl, t)]:
                     rows.append((i, j, syn))
         return np.asarray(sorted(rows), dtype=np.int32).reshape(-1, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSlab:
+    """One resident model's region of a concatenated multi-model table.
+
+    Slabs partition both axes of the shared address space: neurons
+    ``[neuron_lo, neuron_hi)`` and clusters ``[cluster_lo, cluster_hi)``
+    belong exclusively to this model, and its tags live in ``[0, k_tags)``
+    of every one of its clusters' tag spaces. Because clusters are disjoint,
+    two models may use the same tag *ids* without collision — the (cluster,
+    tag) pair is the routed address, and the cluster halves never overlap
+    (the "tag-space partitioning" of DESIGN.md §16).
+    """
+
+    neuron_lo: int
+    neuron_hi: int
+    cluster_lo: int
+    cluster_hi: int
+    k_tags: int  # the model's own K (<= the combined table's K)
+
+    @property
+    def n_neurons(self) -> int:
+        return self.neuron_hi - self.neuron_lo
+
+    @property
+    def n_clusters(self) -> int:
+        return self.cluster_hi - self.cluster_lo
+
+
+def concat_tables(
+    tables_list: Sequence[RoutingTables],
+) -> tuple[RoutingTables, list[TableSlab]]:
+    """Concatenate per-model routing tables into one slab-addressed table.
+
+    The combined table serves every model from a single engine: model ``m``
+    occupies neurons ``[slab.neuron_lo, slab.neuron_hi)`` and clusters
+    ``[slab.cluster_lo, slab.cluster_hi)``; its ``src_dest`` entries are
+    rebased by the cluster offset so stage-1 events stay inside the slab.
+    Entry/CAM/tag widths are padded to the per-model maxima (padding rows
+    are empty, ``-1``); tag values are NOT rebased — cluster disjointness
+    already makes (cluster, tag) addresses collision-free.
+
+    All models must share ``cluster_size`` (slabs must tile the combined
+    cluster grid uniformly — the engine derives cluster ids by integer
+    division). The combined table carries no placement; the registry stamps
+    one for the shared pool fabric.
+    """
+    if not tables_list:
+        raise ValueError("concat_tables needs at least one table")
+    cs = tables_list[0].cluster_size
+    for i, t in enumerate(tables_list):
+        if t.cluster_size != cs:
+            raise ValueError(
+                f"model {i} has cluster_size={t.cluster_size}, expected {cs} "
+                "— slabs must tile a uniform cluster grid"
+            )
+    e_max = max(t.src_tag.shape[1] for t in tables_list)
+    s_max = max(t.cam_tag.shape[1] for t in tables_list)
+    k_max = max(t.k_tags for t in tables_list)
+    n_total = sum(t.n_neurons for t in tables_list)
+    src_tag = np.full((n_total, e_max), -1, dtype=np.int32)
+    src_dest = np.full((n_total, e_max), -1, dtype=np.int32)
+    cam_tag = np.full((n_total, s_max), -1, dtype=np.int32)
+    cam_syn = np.zeros((n_total, s_max), dtype=np.int32)
+    slabs: list[TableSlab] = []
+    n0 = 0
+    for t in tables_list:
+        n1 = n0 + t.n_neurons
+        c0 = n0 // cs
+        e, s = t.src_tag.shape[1], t.cam_tag.shape[1]
+        src_tag[n0:n1, :e] = t.src_tag
+        src_dest[n0:n1, :e] = np.where(t.src_dest >= 0, t.src_dest + c0, -1)
+        cam_tag[n0:n1, :s] = t.cam_tag
+        cam_syn[n0:n1, :s] = t.cam_syn
+        slabs.append(
+            TableSlab(
+                neuron_lo=n0,
+                neuron_hi=n1,
+                cluster_lo=c0,
+                cluster_hi=n1 // cs,
+                k_tags=t.k_tags,
+            )
+        )
+        n0 = n1
+    combined = RoutingTables(
+        src_tag=src_tag,
+        src_dest=src_dest,
+        cam_tag=cam_tag,
+        cam_syn=cam_syn,
+        cluster_size=cs,
+        k_tags=k_max,
+        tile_of_cluster=None,
+    )
+    return combined, slabs
 
 
 @dataclasses.dataclass(frozen=True)

@@ -34,13 +34,22 @@ argmax decision at ``max_steps``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from collections import deque
 
+import jax
 import numpy as np
 
 from repro.core.cnn import CompiledCnn, poker_neuron_params
-from repro.core.event_engine import EventEngine
+from repro.core.event_engine import (
+    EventEngine,
+    ModelRegistry,
+    SlotCarry,
+    embed_slot_carry,
+    slice_slot_carry,
+)
+from repro.core.tags import RoutingTables
 from repro.data.pipeline import DvsStreamConfig, DvsStreamSource
 
 __all__ = [
@@ -50,6 +59,7 @@ __all__ = [
     "AerSessionPool",
     "PoolFullError",
     "SlotError",
+    "CheckpointMismatchError",
     "build_poker_engine",
 ]
 
@@ -63,8 +73,18 @@ class SlotError(ValueError):
     eviction of an unoccupied slot, or quarantine of an occupied one."""
 
 
+class CheckpointMismatchError(ValueError):
+    """A checkpoint's geometry / resident-model fingerprint does not match
+    the pool restoring it. Raised *before* any carry state is spliced, so a
+    failed restore never corrupts the pool (DESIGN.md §16)."""
+
+
 def build_poker_engine(
-    tables, backend: str = "reference", donate_carry: bool = True, faults=None
+    tables,
+    backend: str = "reference",
+    donate_carry: bool = True,
+    faults=None,
+    entry_slabs=None,
 ) -> EventEngine:
     """Event engine at the §V serving operating point for a dispatch backend.
 
@@ -82,6 +102,8 @@ def build_poker_engine(
     for debuggers that want to inspect a pre-step carry after stepping).
     """
     params = poker_neuron_params()
+    if not isinstance(tables, RoutingTables) and hasattr(tables, "tables"):
+        tables = tables.tables
     q_cap = tables.n_neurons
     if backend == "fabric":
         from repro.core.routing import Fabric
@@ -90,11 +112,14 @@ def build_poker_engine(
         return EventEngine(
             tables, params, queue_capacity=q_cap, fabric=Fabric(),
             donate_carry=donate_carry, fabric_options=opts,
+            entry_slabs=entry_slabs,
         )
     if faults is not None:
         raise ValueError(
             f"fault injection needs the fabric backend, got {backend!r}"
         )
+    if entry_slabs is not None:
+        raise ValueError("entry_slabs only applies to the fabric backend")
     return EventEngine(
         tables, params, backend=backend, queue_capacity=q_cap,
         donate_carry=donate_carry,
@@ -118,6 +143,10 @@ class DvsSession:
     session_id: int
     source: DvsStreamSource
     label: int | None = None  # ground truth when known (synthetic streams)
+    # which resident model serves this tenant — DATA, never shape: admitting
+    # a session on a different model recompiles nothing (DESIGN.md §16).
+    # ``None`` resolves to the pool's sole resident model at admission.
+    model: str | None = None
     # runtime state, owned by the pool
     step: int = 0  # steps since admission (= the source's cursor)
     counts: np.ndarray | None = None  # [n_classes] cumulative output spikes
@@ -152,26 +181,232 @@ class AerSessionPool:
     ``pool_size`` and surgically reset per slot on eviction.
     """
 
-    def __init__(self, cc: CompiledCnn, engine: EventEngine, cfg: AerServeConfig):
-        if engine.n_neurons != cc.tables.n_neurons:
-            raise ValueError(
-                f"engine serves {engine.n_neurons} neurons, compiled CNN has "
-                f"{cc.tables.n_neurons}"
-            )
+    def __init__(
+        self,
+        cc: CompiledCnn,
+        engine: EventEngine,
+        cfg: AerServeConfig,
+        *,
+        models: dict[str, CompiledCnn] | None = None,
+        engine_kw: dict | None = None,
+    ):
         if cfg.pool_size <= 0:
             raise ValueError(f"pool_size must be positive, got {cfg.pool_size}")
+        # registry-of-one by default: the single-model constructor is the
+        # degenerate case of multi-model residency (DESIGN.md §16)
+        self.models: dict[str, CompiledCnn] = (
+            dict(models) if models else {"default": cc}
+        )
+        self.registry = ModelRegistry(
+            {name: m.tables for name, m in self.models.items()}
+        )
+        combined, self.slabs = self.registry.combined()
+        if engine.n_neurons != combined.n_neurons:
+            raise ValueError(
+                f"engine serves {engine.n_neurons} neurons, compiled CNN has "
+                f"{combined.n_neurons}"
+            )
         self.cc = cc
         self.engine = engine
         self.cfg = cfg
         self.n_classes = cc.cfg.n_classes
+        self._engine_kw = engine_kw  # set by from_models: enables hot-swap
         self.carry = engine.init_state(batch=cfg.pool_size)
         self.slots: list[DvsSession | None] = [None] * cfg.pool_size
         self.n_steps = 0  # engine steps taken (all slots advance together)
         self.quarantined: set[int] = set()  # slots withdrawn from admission
         self.last_stats = None  # DeliveryStats of the most recent step()
         self._zero_act = np.zeros(
-            (cc.tables.n_clusters, cc.cfg.k_tags), dtype=np.float32
+            (engine.n_clusters, engine.k_tags), dtype=np.float32
         )
+
+    # -- multi-model residency (DESIGN.md §16) -----------------------------
+    @staticmethod
+    def _engine_for(models: dict[str, CompiledCnn], engine_kw: dict) -> EventEngine:
+        """One engine over the concatenated slabs of every resident model.
+
+        In fabric-ring mode the static entry table is assembled slab-by-slab
+        (slab-offset addressing); fault injection needs the full-grid
+        Bernoulli draw, so faulted engines build from the concatenated table
+        instead — the two constructions are bit-identical.
+        """
+        registry = ModelRegistry(
+            {name: m.tables for name, m in models.items()}
+        )
+        combined, _ = registry.combined()
+        entry_slabs = None
+        if (
+            len(models) > 1
+            and engine_kw.get("backend") == "fabric"
+            and engine_kw.get("faults") is None
+        ):
+            entry_slabs = [
+                (t.src_tag, t.src_dest)
+                for t in (registry.tables_of(n) for n in registry.names)
+            ]
+        return build_poker_engine(combined, entry_slabs=entry_slabs, **engine_kw)
+
+    @classmethod
+    def from_models(
+        cls,
+        models: dict[str, CompiledCnn],
+        cfg: AerServeConfig,
+        *,
+        backend: str = "reference",
+        donate_carry: bool = True,
+        faults=None,
+    ) -> "AerSessionPool":
+        """Pool with N resident models sharing one engine, hot-swap enabled.
+
+        Sessions pick their model by name at admission (``DvsSession.model``)
+        — model identity is per-slot data, so serving a mix of tenants on
+        different models is one jitted step, no recompile. Pools built this
+        way own their engine recipe and support :meth:`load_model` /
+        :meth:`unload_model` on a live pool.
+        """
+        if not models:
+            raise ValueError("from_models needs at least one resident model")
+        engine_kw = {
+            "backend": backend,
+            "donate_carry": donate_carry,
+            "faults": faults,
+        }
+        engine = cls._engine_for(models, engine_kw)
+        first = next(iter(models.values()))
+        return cls(first, engine, cfg, models=models, engine_kw=engine_kw)
+
+    def fingerprint(self) -> str:
+        """Identity of this pool's serving geometry: resident models (tables
+        + slab order) × delivery mode × pool size. Checkpoints carry it;
+        restore refuses a mismatch (:class:`CheckpointMismatchError`)."""
+        mode = (
+            "ring"
+            if self.engine.fabric_ring
+            else "fabric"
+            if self.engine.fabric_backend is not None
+            else "queued"
+        )
+        h = hashlib.sha256()
+        h.update(self.registry.fingerprint().encode())
+        h.update(f"|{mode}|P{self.cfg.pool_size}".encode())
+        return h.hexdigest()
+
+    def _resolve_model(self, session: DvsSession) -> str:
+        name = session.model
+        if name is None:
+            if len(self.models) > 1:
+                raise ValueError(
+                    "session must name its model when several are resident "
+                    f"(have {list(self.models)})"
+                )
+            name = next(iter(self.models))
+            session.model = name
+        elif name not in self.models:
+            raise KeyError(
+                f"model {name!r} is not resident (have {list(self.models)})"
+            )
+        return name
+
+    def load_model(self, name: str, cc: CompiledCnn) -> None:
+        """Make ``cc`` resident under ``name`` on the LIVE pool.
+
+        In-flight sessions keep running: their slots are migrated onto the
+        rebuilt engine (slab slice -> fresh-init embed -> splice), readout
+        accumulators untouched. The rebuild recompiles once — that cost is
+        the ``multimodel_load_overhead`` row in BENCH_routing.json; steady-
+        state serving of the grown pool never recompiles again.
+        """
+        if self._engine_kw is None:
+            raise RuntimeError(
+                "this pool wraps a caller-built engine and cannot rebuild it;"
+                " construct with AerSessionPool.from_models to enable hot-swap"
+            )
+        if name in self.models:
+            raise ValueError(f"model {name!r} already resident")
+        self._rebind({**self.models, name: cc})
+
+    def unload_model(self, name: str) -> None:
+        """Remove a resident model from the LIVE pool (hot-swap ladder's
+        final rung: load the replacement, drain its predecessor's sessions,
+        unload). Refuses while sessions still run on it."""
+        if self._engine_kw is None:
+            raise RuntimeError(
+                "this pool wraps a caller-built engine and cannot rebuild it;"
+                " construct with AerSessionPool.from_models to enable hot-swap"
+            )
+        if name not in self.models:
+            raise KeyError(f"model {name!r} is not resident")
+        if len(self.models) == 1:
+            raise ValueError("cannot unload the last resident model")
+        live = [
+            i
+            for i, s in enumerate(self.slots)
+            if s is not None and s.model == name
+        ]
+        if live:
+            raise RuntimeError(
+                f"model {name!r} has live sessions in slots {live}; drain "
+                "them before unloading"
+            )
+        self._rebind(
+            {n: m for n, m in self.models.items() if n != name}
+        )
+
+    def _rebind(self, new_models: dict[str, CompiledCnn]) -> None:
+        """Swap the pool onto a rebuilt engine for ``new_models``, migrating
+        every occupied slot's runtime state across the slab re-layout."""
+        new_engine = self._engine_for(new_models, self._engine_kw)
+        new_registry = ModelRegistry(
+            {name: m.tables for name, m in new_models.items()}
+        )
+        new_slabs = new_registry.slabs()
+        new_carry = new_engine.init_state(batch=self.cfg.pool_size)
+        occ = self.occupied
+        if occ:
+            sc = self.engine.extract_slots(self.carry, occ)
+            for j, slot in enumerate(occ):
+                sess = self.slots[slot]
+                row = SlotCarry(
+                    state=jax.tree_util.tree_map(
+                        lambda x: np.asarray(x)[j : j + 1], sc.state
+                    ),
+                    spikes=np.asarray(sc.spikes)[j : j + 1],
+                    inflight=None
+                    if sc.inflight is None
+                    else np.asarray(sc.inflight)[j : j + 1],
+                )
+                part = slice_slot_carry(row, self.slabs[sess.model])
+                emb = embed_slot_carry(part, new_engine, new_slabs[sess.model])
+                new_carry = new_engine.splice_slots(new_carry, [slot], emb)
+        self.models = dict(new_models)
+        self.registry = new_registry
+        self.slabs = new_slabs
+        self.engine = new_engine
+        self.carry = new_carry
+        self._zero_act = np.zeros(
+            (new_engine.n_clusters, new_engine.k_tags), dtype=np.float32
+        )
+
+    def clone_onto(
+        self, new_engine: EventEngine, cfg: AerServeConfig | None = None
+    ) -> "AerSessionPool":
+        """New pool on ``new_engine`` (same slab geometry) with every live
+        session migrated — the repair path of serve/health.migrate_pool,
+        kept here so it preserves multi-model residency."""
+        new_pool = AerSessionPool(
+            self.cc,
+            new_engine,
+            cfg or self.cfg,
+            models=self.models,
+            engine_kw=self._engine_kw,
+        )
+        occ = self.occupied
+        if occ:
+            sc = self.engine.extract_slots(self.carry, occ)
+            target = [new_pool.admit_restored(self.slots[i]) for i in occ]
+            new_pool.carry = new_engine.splice_slots(new_pool.carry, target, sc)
+        new_pool.n_steps = self.n_steps
+        return new_pool
 
     # -- lifecycle ---------------------------------------------------------
     @property
@@ -218,8 +453,11 @@ class AerSessionPool:
                 "quarantined"
             )
         slot = free[0]
+        name = self._resolve_model(session)
         session.step = 0
-        session.counts = np.zeros(self.n_classes, dtype=np.float64)
+        session.counts = np.zeros(
+            self.models[name].cfg.n_classes, dtype=np.float64
+        )
         session.dropped = 0
         session.link_dropped = 0
         session.error = None  # a re-admitted session retries with a clean slate
@@ -242,6 +480,7 @@ class AerSessionPool:
                 "admit_restored needs a session with live runtime state — "
                 "use admit() for new sessions"
             )
+        self._resolve_model(session)
         slot = free[0]
         self.slots[slot] = session
         return slot
@@ -310,30 +549,41 @@ class AerSessionPool:
         eviction sweep) and sees zero input, while every other tenant's
         step proceeds. One bad sensor never takes down the pool.
         """
+        multi = len(self.models) > 1
         acts = []
         for sess in self.slots:
             if sess is None:
                 acts.append(self._zero_act)
                 continue
+            cc_m = self.models[sess.model]
             try:
-                a = self.cc.input_activity(
+                a = cc_m.input_activity(
                     sess.source.events(sess.step), on_invalid=self.cfg.on_invalid
                 )
             except ValueError as e:
                 sess.error = str(e)
                 a = None
-            acts.append(self._zero_act if a is None else a * self.cfg.drive)
-        inp = np.stack(acts)  # [P, nc, K]
+            if a is None:
+                acts.append(self._zero_act)
+            elif not multi:
+                acts.append(a * self.cfg.drive)
+            else:
+                # place the model's [nc_m, K_m] activity into its slab of
+                # the combined [nc_total, K_max] grid — input addressing is
+                # per-slot data, exactly like the model id itself
+                slab = self.slabs[sess.model]
+                full = np.zeros_like(self._zero_act)
+                full[
+                    slab.cluster_lo : slab.cluster_hi, : slab.k_tags
+                ] = a * self.cfg.drive
+                acts.append(full)
+        inp = np.stack(acts)  # [P, nc_total, K_max]
         self.carry, out = self.engine.step(self.carry, inp)
         spikes, stats = out if isinstance(out, tuple) else (out, None)
         spikes = np.asarray(spikes)
         self.last_stats = stats  # watchdog raw material (serve/health.py)
         self.n_steps += 1
 
-        o0, o1 = self.cc.out
-        per_class = (
-            spikes[:, o0:o1].reshape(self.cfg.pool_size, self.n_classes, -1).sum(-1)
-        )
         dropped = None if stats is None else np.asarray(stats.dropped)
         link_dropped = (
             None
@@ -343,7 +593,16 @@ class AerSessionPool:
         for i, sess in enumerate(self.slots):
             if sess is None:
                 continue
-            sess.counts += per_class[i]
+            # readout at the session's model's slab offset: output population
+            # neurons live at slab.neuron_lo + the model's own out range
+            cc_m = self.models[sess.model]
+            base = self.slabs[sess.model].neuron_lo
+            o0, o1 = cc_m.out
+            sess.counts += (
+                spikes[i, base + o0 : base + o1]
+                .reshape(cc_m.cfg.n_classes, -1)
+                .sum(-1)
+            )
             sess.step += 1
             if dropped is not None:
                 sess.dropped += int(dropped[i])
@@ -384,6 +643,7 @@ class AerSessionPool:
         return {
             "session_id": sess.session_id,
             "label": sess.label,
+            "model": sess.model,
             "step": sess.step,
             "counts": None if sess.counts is None else sess.counts.tolist(),
             "dropped": sess.dropped,
@@ -407,6 +667,8 @@ class AerSessionPool:
         meta = {
             "n_steps": self.n_steps,
             "pool_size": self.cfg.pool_size,
+            "fingerprint": self.fingerprint(),
+            "models": list(self.models),
             "quarantined": sorted(self.quarantined),
             "slots": [
                 None if s is None else self._session_meta(s) for s in self.slots
@@ -425,6 +687,7 @@ class AerSessionPool:
         ckptr,
         step: int | None = None,
         source_factory=None,
+        models: dict[str, CompiledCnn] | None = None,
     ) -> "AerSessionPool":
         """Rebuild a pool from a :meth:`checkpoint` snapshot.
 
@@ -444,16 +707,36 @@ class AerSessionPool:
                 raise FileNotFoundError(
                     f"no complete checkpoint under {ckptr.dir}"
                 )
-        pool = cls(cc, engine, cfg)
+        pool = cls(cc, engine, cfg, models=models)
         like = {"carry": pool.carry, "session_meta": np.zeros(0, np.uint8)}
-        tree = ckptr.restore(step, like)
+        try:
+            tree = ckptr.restore(step, like)
+        except CheckpointMismatchError:
+            raise
+        except ValueError as e:
+            # the checkpointed carry does not even FIT this engine — e.g. a
+            # retargeted geometry changed a leaf shape. Refuse before any
+            # state is spliced: a failed restore must raise, not corrupt.
+            raise CheckpointMismatchError(
+                f"checkpoint at step {step} does not fit the restoring "
+                f"engine's carry: {e}"
+            ) from e
         meta = json.loads(
             np.asarray(tree["session_meta"]).astype(np.uint8).tobytes().decode()
         )
         if int(meta["pool_size"]) != cfg.pool_size:
-            raise ValueError(
+            raise CheckpointMismatchError(
                 f"checkpoint was taken at pool_size={meta['pool_size']}, "
                 f"restoring into pool_size={cfg.pool_size}"
+            )
+        want = meta.get("fingerprint")
+        if want is not None and want != pool.fingerprint():
+            raise CheckpointMismatchError(
+                f"checkpoint fingerprint {want[:12]}... does not match the "
+                f"restoring pool's {pool.fingerprint()[:12]}... — the engine "
+                "geometry, delivery mode, or resident model set changed "
+                "since the snapshot (restore into the matching pool, or "
+                "migrate with clone_onto after a bit-exact restore)"
             )
         pool.carry = tree["carry"]
         pool.n_steps = int(meta["n_steps"])
@@ -474,10 +757,19 @@ class AerSessionPool:
                     f"slot {i}'s source kind {src_meta.get('kind')!r} is not "
                     "serializable — pass source_factory to rebuild it"
                 )
+            model = sm.get("model")
+            if model is None and len(pool.models) == 1:
+                model = next(iter(pool.models))
+            if model not in pool.models:
+                raise CheckpointMismatchError(
+                    f"slot {i}'s session ran on model {model!r}, which is "
+                    f"not resident in the restoring pool ({list(pool.models)})"
+                )
             pool.slots[i] = DvsSession(
                 session_id=sm["session_id"],
                 source=source,
                 label=sm["label"],
+                model=model,
                 step=int(sm["step"]),
                 counts=None
                 if sm["counts"] is None

@@ -323,13 +323,8 @@ def migrate_pool(
     readout accumulators untouched (``admit_restored``). Bit-exact when the
     two engines share geometry and ``max_delay``; best-effort re-bucketing
     otherwise (DESIGN.md §15). Quarantined-slot state is deliberately NOT
-    copied: the new engine's lanes start with a clean record.
+    copied: the new engine's lanes start with a clean record. Multi-model
+    pools keep their full resident set — the mechanics live in
+    :meth:`AerSessionPool.clone_onto` (DESIGN.md §16).
     """
-    new_pool = AerSessionPool(pool.cc, new_engine, cfg or pool.cfg)
-    occupied = pool.occupied
-    if occupied:
-        sc = pool.engine.extract_slots(pool.carry, occupied)
-        new_slots = [new_pool.admit_restored(pool.slots[i]) for i in occupied]
-        new_pool.carry = new_engine.splice_slots(new_pool.carry, new_slots, sc)
-    new_pool.n_steps = pool.n_steps
-    return new_pool
+    return pool.clone_onto(new_engine, cfg)

@@ -1,0 +1,208 @@
+"""Compiled-network artifacts (DESIGN.md §16): save/load round-trip,
+geometry retargeting, and feasibility reporting.
+
+The artifact is the unit of loading for multi-model serving, so the
+round-trip must be *bytes*-exact (tables, report arrays, entry-table
+reconstruction), and ``retarget`` to any feasible geometry must preserve
+the network's dense-equivalent connectivity bit-exactly — pad neurons are
+unconnected, re-allocation may move tags, but the spikes a network can
+produce are geometry-invariant.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.compiler import (
+    CompiledArtifact,
+    Geometry,
+    InfeasibleGeometryError,
+    artifact_from_tables,
+    compile_network_v2,
+    retarget,
+)
+from repro.core.tags import NetworkSpec, compile_network
+
+
+def _random_spec(seed, n=64, cluster=16, k=96, edges=40, groups=8):
+    rng = np.random.default_rng(seed)
+    spec = NetworkSpec(
+        n_neurons=n, cluster_size=cluster, k_tags=k,
+        max_cam_words=64, max_sram_entries=16,
+    )
+    for _ in range(edges):
+        spec.connect(int(rng.integers(n)), int(rng.integers(n)), int(rng.integers(4)))
+    for _ in range(groups):
+        srcs = [int(s) for s in rng.choice(n, size=int(rng.integers(1, 4)), replace=False)]
+        tgts = [(int(rng.integers(n)), int(rng.integers(4)))
+                for _ in range(int(rng.integers(1, 4)))]
+        spec.connect_group(srcs, tgts, shared_tag=bool(rng.integers(2)))
+    return spec
+
+
+def _entries_equal(a, b):
+    for f in ("src", "dstk", "delay", "cross", "link_start", "hops",
+              "latency_s", "energy_j", "valid", "alive"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+        )
+
+
+def test_save_load_round_trip_bytes_identical(tmp_path):
+    spec = _random_spec(3)
+    geo = Geometry(grid_x=2, grid_y=2, cores_per_tile=1, neurons_per_core=16,
+                   k_tags=96)
+    art = retarget(spec, geo, anneal_steps=50)
+    path = art.save(str(tmp_path / "art"))
+    back = CompiledArtifact.load(path)
+
+    for f in ("src_tag", "src_dest", "cam_tag", "cam_syn", "tile_of_cluster"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(art.tables, f)),
+            np.asarray(getattr(back.tables, f)),
+            err_msg=f,
+        )
+    assert back.geometry == art.geometry
+    assert back.fingerprint() == art.fingerprint()
+    assert back.feasibility.binding == art.feasibility.binding
+    assert back.feasibility.asdict() == art.feasibility.asdict()
+    # the compile report rides along, array-exact
+    assert (back.report is None) == (art.report is None)
+    if art.report is not None:
+        np.testing.assert_array_equal(back.report.tags_used, art.report.tags_used)
+        np.testing.assert_array_equal(back.report.cam_fill, art.report.cam_fill)
+        assert back.report.eq2_bits_per_neuron == art.report.eq2_bits_per_neuron
+    # the fabric entry table is reconstructed, not stored — and identical
+    _entries_equal(art.entry_table(), back.entry_table())
+
+
+def test_load_rejects_tampered_artifact(tmp_path):
+    spec = _random_spec(4)
+    geo = Geometry(grid_x=2, grid_y=1, cores_per_tile=2, neurons_per_core=16,
+                   k_tags=96)
+    path = retarget(spec, geo, optimize=False).save(str(tmp_path / "art"))
+    # flip one CAM word on disk: the recorded fingerprint must catch it
+    import json
+    import os
+    with np.load(os.path.join(path, "tables.npz")) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arrays["cam_tag"].flat[0] += 1
+    np.savez(os.path.join(path, "tables.npz"), **arrays)
+    with pytest.raises(ValueError, match="corrupt"):
+        CompiledArtifact.load(path)
+    # sanity: the json alone still parses
+    with open(os.path.join(path, "artifact.json")) as f:
+        assert json.load(f)["format"] == 1
+
+
+@pytest.mark.parametrize(
+    "geo, binding",
+    [
+        # 64 neurons at 16/core need 4 cores; 1 tile x 2 cores can't host
+        (Geometry(grid_x=1, grid_y=1, cores_per_tile=2, neurons_per_core=16,
+                  k_tags=96), "cores"),
+        (Geometry(grid_x=2, grid_y=2, cores_per_tile=1, neurons_per_core=16,
+                  k_tags=96, max_cam_words=1), "cam"),
+        (Geometry(grid_x=2, grid_y=2, cores_per_tile=1, neurons_per_core=16,
+                  k_tags=96, max_sram_entries=1), "sram"),
+        (Geometry(grid_x=2, grid_y=2, cores_per_tile=1, neurons_per_core=16,
+                  k_tags=2), "tags"),
+    ],
+)
+def test_retarget_names_binding_constraint(geo, binding):
+    spec = _random_spec(5)
+    with pytest.raises(InfeasibleGeometryError) as ei:
+        retarget(spec, geo)
+    assert ei.value.report.binding == binding
+    assert not ei.value.report.feasible
+
+
+def test_feasibility_report_on_feasible_geometry():
+    spec = _random_spec(6)
+    geo = Geometry(grid_x=2, grid_y=2, cores_per_tile=2, neurons_per_core=16,
+                   k_tags=96)
+    art = retarget(spec, geo, optimize=False)
+    fz = art.feasibility
+    assert fz.feasible
+    assert set(fz.utilization) == {"tags", "cam", "sram", "cores", "link"}
+    assert fz.binding in fz.utilization
+    assert all(fz.utilization[k] <= 1.0 for k in ("tags", "cam", "sram", "cores"))
+    # placement was stamped into the tables (self-contained artifact)
+    assert art.tables.tile_of_cluster is not None
+    assert art.tables.tile_of_cluster.shape == (art.tables.n_clusters,)
+
+
+def test_artifact_from_tables_keeps_postprocessed_tables():
+    """Placement-only retarget: tables bound as-is (the spliced-CAM path)."""
+    spec = _random_spec(7)
+    tables = compile_network(spec)
+    geo = Geometry(grid_x=2, grid_y=2, cores_per_tile=1, neurons_per_core=16,
+                   k_tags=96)
+    art = artifact_from_tables(tables, geo, optimize=False)
+    for f in ("src_tag", "src_dest", "cam_tag", "cam_syn"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(art.tables, f)), np.asarray(getattr(tables, f))
+        )
+    # wrong cluster size cannot be fixed by placement alone
+    with pytest.raises(InfeasibleGeometryError) as ei:
+        artifact_from_tables(tables, Geometry(neurons_per_core=32))
+    assert ei.value.report.binding == "cores"
+
+
+def test_fingerprint_tracks_geometry_and_content():
+    spec = _random_spec(8)
+    g1 = Geometry(grid_x=2, grid_y=2, cores_per_tile=1, neurons_per_core=16,
+                  k_tags=96)
+    g2 = Geometry(grid_x=4, grid_y=1, cores_per_tile=1, neurons_per_core=16,
+                  k_tags=96)
+    a1 = retarget(spec, g1, optimize=False)
+    a2 = retarget(spec, g2, optimize=False)
+    assert a1.fingerprint() != a2.fingerprint()
+    # deterministic: same inputs, same fingerprint
+    assert a1.fingerprint() == retarget(spec, g1, optimize=False).fingerprint()
+
+
+@given(seed=st.integers(0, 10_000), npc=st.sampled_from([8, 16, 32]))
+@settings(max_examples=20, deadline=None)
+def test_retarget_preserves_dense_equivalent(seed, npc):
+    """Property: retargeting to any feasible geometry preserves the
+    network's dense-equivalent connectivity multiset bit-exactly — tags,
+    clustering and placement all move, spikes cannot."""
+    # n=56 at spec cluster 8 is valid (7 clusters) yet not a multiple of the
+    # 16/32-neuron target cores — retarget must pad up to whole cores
+    spec = _random_spec(seed, n=56, cluster=8, edges=30, groups=6)
+    baseline = compile_network(spec).dense_equivalent()
+    geo = Geometry(grid_x=2, grid_y=2, cores_per_tile=2, neurons_per_core=npc,
+                   k_tags=128)
+    art = retarget(spec, geo, optimize=False)
+    assert art.tables.cluster_size == npc
+    assert art.tables.n_neurons % npc == 0
+    np.testing.assert_array_equal(art.tables.dense_equivalent(), baseline)
+
+
+def test_retarget_preserves_dense_equivalent_seeded():
+    """Deterministic companion to the hypothesis property above, so the
+    invariant is exercised even without the ``test`` extra installed."""
+    for seed, npc in [(0, 8), (1, 16), (2, 32), (3, 16)]:
+        spec = _random_spec(seed, n=56, cluster=8, edges=30, groups=6)
+        baseline = compile_network(spec).dense_equivalent()
+        geo = Geometry(grid_x=2, grid_y=2, cores_per_tile=2,
+                       neurons_per_core=npc, k_tags=128)
+        art = retarget(spec, geo, optimize=False)
+        np.testing.assert_array_equal(art.tables.dense_equivalent(), baseline)
+
+
+def test_retarget_from_compile_result_keeps_optimized_placement():
+    """A CompileResult's annealed placement survives when it fits the target
+    fabric; the artifact is feasible and reports link utilization."""
+    spec = _random_spec(9)
+    res = compile_network_v2(spec, fabric=Geometry(
+        grid_x=2, grid_y=2, cores_per_tile=1, neurons_per_core=16, k_tags=96
+    ).fabric(), anneal_steps=50)
+    geo = Geometry(grid_x=2, grid_y=2, cores_per_tile=1, neurons_per_core=16,
+                   k_tags=96)
+    art = artifact_from_tables(res, geo)
+    np.testing.assert_array_equal(
+        art.tables.tile_of_cluster, res.tables.tile_of_cluster
+    )
+    assert "link" in art.feasibility.utilization
