@@ -40,18 +40,45 @@ def main(argv: list[str] | None = None) -> None:
         metavar="DIR",
         help="capture a jax.profiler trace of the sweep into DIR",
     )
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=None,
+        metavar="N",
+        help="fake N host-platform devices (sets "
+        "--xla_force_host_platform_device_count before jax imports; the "
+        "sharded serving rows then run shards on disjoint devices)",
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        metavar="MOD[,MOD...]",
+        help="run only these benchmark modules (e.g. 'serving'); "
+        "BENCH_routing.json is not rewritten unless BENCH_ROUTING_JSON "
+        "is set (a partial sweep must not clobber the full trajectory)",
+    )
     args = ap.parse_args(argv)
+    if args.devices is not None:
+        if "jax" in sys.modules:
+            raise SystemExit(
+                "--devices must take effect before jax is imported"
+            )
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    only = args.only.split(",") if args.only else None
     if args.profile is not None:
         import jax
 
         with jax.profiler.trace(args.profile):
-            _run_all()
+            _run_all(only)
         print(f"wrote profiler trace to {args.profile}", file=sys.stderr)
     else:
-        _run_all()
+        _run_all(only)
 
 
-def _run_all() -> None:
+def _run_all(only: list[str] | None = None) -> None:
     from benchmarks import (
         cnn_poker,
         comparison,
@@ -73,6 +100,11 @@ def _run_all() -> None:
         ("serving", serving),
         ("roofline", roofline),
     ]
+    if only is not None:
+        unknown = set(only) - {name for name, _ in modules}
+        if unknown:
+            raise SystemExit(f"unknown benchmark modules: {sorted(unknown)}")
+        modules = [(n, m) for n, m in modules if n in only]
     print("name,us_per_call,derived")
     failed = 0
     failed_routing = False
@@ -94,6 +126,9 @@ def _run_all() -> None:
     json_path = os.environ.get("BENCH_ROUTING_JSON", "BENCH_routing.json")
     if failed_routing:  # keep the last good trajectory instead of clobbering it
         print(f"routing benchmark failed; NOT rewriting {json_path}", file=sys.stderr)
+    elif only is not None and "BENCH_ROUTING_JSON" not in os.environ:
+        # a partial sweep must not clobber the committed full trajectory
+        print(f"--only given; NOT rewriting {json_path}", file=sys.stderr)
     else:
         with open(json_path, "w") as f:
             json.dump({"rows": routing_rows}, f, indent=2)

@@ -36,6 +36,7 @@ from repro.serve.aer import (
     DvsSession,
     build_poker_engine,
 )
+from repro.serve.sharded import ShardConfig, ShardedSessionPool
 
 SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
 
@@ -230,6 +231,71 @@ def run() -> list[tuple[str, float, str]]:
             f"multimodel_swap_pool{pool_size}",
             wall / steps * 1e6,
             f"{len(done) / wall:.1f}sess_s_across_hot_load",
+        )
+    )
+
+    # sharded fleet (DESIGN.md §17): the same sustained-load loop over a
+    # ShardedSessionPool — the fleet total pool is split across `dev`
+    # single-device shards (disjoint devices when the process has that many,
+    # e.g. `python -m benchmarks.run --devices 4`; oversubscribed on one
+    # otherwise — same code path either way). CI sharded-serving-smoke
+    # asserts the dev{1,2,4} rows land in BENCH_routing.json.
+    totals = (4,) if SMOKE else (8, 64)
+    for total in totals:
+        for dev in (1, 2, 4):
+            if total % dev:
+                continue
+            fleet = ShardedSessionPool(
+                cc,
+                AerServeConfig(pool_size=total // dev, max_steps=max_steps),
+                ShardConfig(n_shards=dev, queue_depth=total, backend="fabric"),
+            )
+            fleet.serve(_sessions(max(2, total // 4), seed=5))  # warm shards
+            steps0 = fleet.n_steps
+            t0 = time.perf_counter()
+            results = fleet.serve(_sessions(2 * total))
+            wall = time.perf_counter() - t0
+            steps = fleet.n_steps - steps0
+            lat = np.array(
+                [r.latency_steps for r in results], dtype=np.float64
+            )
+            out.append(
+                (
+                    f"serving_sharded_pool{total}_dev{dev}",
+                    wall / steps * 1e6,
+                    f"{len(results) / wall:.1f}sess_s"
+                    f"_p50_{np.percentile(lat, 50) * dt_ms:.0f}ms"
+                    f"_p99_{np.percentile(lat, 99) * dt_ms:.0f}ms",
+                )
+            )
+
+    # live-migration overhead (§17 layer 3): cost of moving one mid-flight
+    # tenant between shards, against the fleet step it displaces
+    fleet = ShardedSessionPool(
+        cc,
+        AerServeConfig(pool_size=2, max_steps=10**6),
+        ShardConfig(n_shards=2, queue_depth=4, backend="fabric"),
+    )
+    for s in _sessions(2, seed=5):
+        fleet.submit(s)
+    for _ in range(4):
+        fleet.step()  # warms the step; leaves in-flight fabric state to move
+    fleet.migrate(0, fleet.locate(0)[0] ^ 1)  # warm extract/splice jit paths
+    n_moves = 4 if SMOKE else 16
+    t0 = time.perf_counter()
+    for _ in range(n_moves):
+        fleet.migrate(0, fleet.locate(0)[0] ^ 1)
+    mig_us = (time.perf_counter() - t0) / n_moves * 1e6
+    n_probe = 4 if SMOKE else 16
+    t0 = time.perf_counter()
+    for _ in range(n_probe):
+        fleet.step()
+    fleet_step_us = (time.perf_counter() - t0) / n_probe * 1e6
+    out.append(
+        (
+            "serving_migration_overhead",
+            mig_us,
+            f"{mig_us / fleet_step_us:.1f}x_fleet_step_per_move",
         )
     )
     return out

@@ -79,6 +79,8 @@ __all__ = [
     "traffic_matrix",
     "placement_cost",
     "optimize_placement",
+    "device_slab_placement",
+    "session_rate",
     "repair_placement",
     "build_report",
     "compile_network_v2",
@@ -356,6 +358,69 @@ def optimize_placement(
     info["cost_final"] = cost1
     info["mean_hops_final"] = cost1 / total if total else 0.0
     return placement, info
+
+
+def device_slab_placement(
+    tables: RoutingTables,
+    fabric,
+    n_slabs: int,
+    *,
+    rates: np.ndarray | Sequence[float] | None = None,
+    seed: int = 0,
+    anneal_steps: int | None = None,
+) -> tuple[np.ndarray, dict]:
+    """Traffic-aware placement constrained to ``n_slabs`` device slabs.
+
+    ``EventEngine.make_sharded_step`` (and :class:`ShardedEventEngine`) maps
+    ``n_slabs`` equal contiguous cluster slabs onto devices, which requires
+    every tile's clusters to live inside one slab. The hierarchical linear
+    default placement packs clusters densely and often violates that (the
+    poker CNN's 6 clusters land 4-to-a-tile, straddling a 2-slab split), so
+    ``optimize_placement(device_slabs=...)`` cannot seed from it. This
+    helper builds a compliant seed — slab ``g`` gets its own contiguous run
+    of tiles, clusters packed ``cores_per_tile`` to a tile within it — and
+    anneals from there under the slab constraint. Returns ``(placement,
+    info)`` like :func:`optimize_placement`.
+    """
+    if not isinstance(tables, RoutingTables) and hasattr(tables, "tables"):
+        tables = tables.tables
+    nc = tables.n_clusters
+    if n_slabs <= 0 or nc % n_slabs:
+        raise ValueError(f"n_slabs={n_slabs} must divide n_clusters={nc}")
+    per_slab = nc // n_slabs
+    tiles_per_slab = -(-per_slab // fabric.cores_per_tile)
+    if tiles_per_slab * n_slabs > fabric.n_tiles:
+        raise ValueError(
+            f"{n_slabs} slabs x {per_slab} clusters need "
+            f"{tiles_per_slab * n_slabs} tiles, fabric has {fabric.n_tiles}"
+        )
+    init = np.empty(nc, dtype=np.int32)
+    for g in range(n_slabs):
+        lo = g * per_slab
+        local = np.arange(per_slab) // fabric.cores_per_tile
+        init[lo : lo + per_slab] = g * tiles_per_slab + local
+    return optimize_placement(
+        traffic_matrix(tables, rates),
+        fabric,
+        init=init,
+        seed=seed,
+        anneal_steps=anneal_steps,
+        device_slabs=n_slabs,
+    )
+
+
+def session_rate(tables: RoutingTables) -> float:
+    """Predicted fabric event rate of ONE session of this model (events per
+    neuron-spike-rate unit): the total expected inter-cluster AER traffic of
+    the compiled network under uniform firing — :func:`traffic_matrix`
+    summed. The admission controller (serve/sharded.py) scores shards by
+    the summed predicted rate of their resident sessions, so a model with a
+    heavy routing graph counts for proportionally more of a shard's budget
+    than a sparse one (DESIGN.md §17).
+    """
+    if not isinstance(tables, RoutingTables) and hasattr(tables, "tables"):
+        tables = tables.tables
+    return float(traffic_matrix(tables).sum())
 
 
 def repair_placement(

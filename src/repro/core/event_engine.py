@@ -78,6 +78,7 @@ from repro.core.two_stage import N_SYN_TYPES, precompute_syn_onehot
 
 __all__ = [
     "EventEngine",
+    "ShardedEventEngine",
     "DeliveryStats",
     "SlotCarry",
     "ModelRegistry",
@@ -820,6 +821,150 @@ class EventEngine:
             out_specs=(state_spec, spec_c, spec_f, stats_spec),
             **SM_CHECK_KW,
         )
+
+
+class ShardedEventEngine(EventEngine):
+    """:class:`EventEngine` whose jitted step runs multi-device via shard_map.
+
+    The engine owns a 2-D device mesh named ``("data", "model")``: batch
+    slots (tenants) shard over ``data`` and clusters (tiles) over ``model``
+    — one serving shard of a ``ShardedSessionPool`` (serve/sharded.py,
+    DESIGN.md §17). The public step contract is unchanged
+    (``step(carry, input_activity, i_ext) -> (carry, (spikes, stats))``),
+    so session pools, slot surgery (``reset_slots`` / ``extract_slots`` /
+    ``splice_slots``) and checkpointing work on it untouched; only the step
+    dispatch is resharded through :meth:`EventEngine.make_sharded_step`.
+    Queued engines always report a :class:`DeliveryStats` (drops summed
+    fabric-wide by the sharded step), matching the ``queue_capacity``
+    contract of the local engine.
+
+    Constraints inherited from the sharded step: the carry must be batched
+    and the batch must divide ``batch_devices``; ``n_clusters`` must divide
+    ``cluster_devices``; in fabric mode the compiled placement must keep
+    every tile's clusters inside one device slab
+    (:func:`repro.core.compiler.device_slab_placement` builds such
+    placements) and fault injection is rejected. A ``(1, 1)`` mesh is valid
+    — serving code paths are then identical with or without real devices.
+    """
+
+    def __init__(
+        self,
+        tables,
+        params: NeuronParams | None = None,
+        *,
+        devices=None,
+        cluster_devices: int = 1,
+        batch_devices: int = 1,
+        **engine_kw,
+    ):
+        donate = bool(engine_kw.get("donate_carry", False))
+        super().__init__(tables, params, **engine_kw)
+        if cluster_devices <= 0 or batch_devices <= 0:
+            raise ValueError(
+                f"mesh extents must be positive, got {batch_devices} x "
+                f"{cluster_devices}"
+            )
+        need = batch_devices * cluster_devices
+        if devices is None:
+            avail = jax.devices()
+            if need > len(avail):
+                raise ValueError(
+                    f"mesh needs {need} devices, only {len(avail)} visible "
+                    "(set --xla_force_host_platform_device_count on CPU)"
+                )
+            devices = avail[:need]
+        devices = np.asarray(devices, dtype=object)
+        if devices.size != need:
+            raise ValueError(
+                f"got {devices.size} devices for a {batch_devices} x "
+                f"{cluster_devices} mesh"
+            )
+        if self.n_clusters % cluster_devices:
+            raise ValueError(
+                f"{self.n_clusters} clusters do not divide over "
+                f"{cluster_devices} cluster devices"
+            )
+        self.mesh = jax.sharding.Mesh(
+            devices.reshape(batch_devices, cluster_devices), ("data", "model")
+        )
+        self.cluster_devices = cluster_devices
+        self.batch_devices = batch_devices
+        # the sharded step's flat signature, re-adapted to step()'s contract;
+        # placement/tile-split errors surface here, at construction
+        sharded = self.make_sharded_step(self.mesh, "model", batch_axis="data")
+        fabric = self.fabric_backend is not None
+        ring = self.fabric_ring
+        qc = self.queue_capacity
+
+        def _wrapped(carry, input_activity, i_ext=None):
+            dtype = carry[1].dtype
+            inp = jnp.asarray(input_activity, dtype)
+            # shard_map in_specs cannot carry a None leaf: vacant external
+            # drive becomes explicit zeros (free under XLA's simplifier)
+            ie = (
+                jnp.zeros_like(carry[1])
+                if i_ext is None
+                else jnp.asarray(i_ext, dtype)
+            )
+            if fabric and ring:
+                state, prev, rg, cur = carry
+                state, spikes, rg, cur, stats = sharded(
+                    self.tables, state, prev, rg, cur, inp, ie
+                )
+                return (state, spikes, rg, cur), (spikes, stats)
+            if fabric:
+                state, prev, infl = carry
+                state, spikes, infl, stats = sharded(
+                    self.tables, state, prev, infl, inp, ie
+                )
+                return (state, spikes, infl), (spikes, stats)
+            state, prev = carry
+            out = sharded(self.tables, state, prev, inp, ie)
+            if qc is None:
+                state, spikes = out
+                return (state, spikes), spikes
+            state, spikes, dropped = out
+            return (state, spikes), (spikes, DeliveryStats(dropped=dropped))
+
+        self._jit_step = jax.jit(
+            _wrapped, **(_donate_carry_kwargs() if donate else {})
+        )
+
+    def carry_pspecs(self):
+        """PartitionSpec tree for a batched carry under this engine's mesh.
+
+        Matches :meth:`EventEngine.make_sharded_step`'s layout: neuron-state
+        leaves and spikes shard ``[B, N]`` over ``(data, model)``, fabric
+        delay-line carries shard clusters (``[B, D, nc, K]`` over
+        ``(data, None, model)``), and the ring's shared write cursor is
+        replicated. Feed through ``distributed.sharding.named`` into
+        ``jax.device_put`` / ``Checkpointer.restore(shardings=...)`` to land
+        a carry on the mesh — the elastic-restart path
+        (distributed/elastic.py, DESIGN.md §17).
+        """
+        from jax.sharding import PartitionSpec as P
+
+        spec_c = P("data", "model")
+        state = NeuronState(spec_c, spec_c, spec_c, spec_c)
+        if self.fabric_backend is None:
+            return (state, spec_c)
+        spec_f = P("data", None, "model")
+        if self.fabric_ring:
+            return (state, spec_c, spec_f, P())
+        return (state, spec_c, spec_f)
+
+    def place_carry(self, carry):
+        """device_put ``carry`` onto this engine's mesh per :meth:`carry_pspecs`.
+
+        Splice/restore surgery produces host-backed or default-placed
+        arrays; pinning them back onto the shard's own mesh keeps a
+        multi-shard fleet's carries resident on their devices instead of
+        bouncing through the step's implicit resharding.
+        """
+        from repro.distributed.sharding import named
+
+        shardings = named(self.mesh, self.carry_pspecs())
+        return jax.tree.map(jax.device_put, carry, shardings)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,11 @@ token stream stays consistent).
 ``remesh_pspecs`` re-resolves every parameter's logical axes against the new
 mesh — because resolution is pure (priority + divisibility), the same params
 land on valid shardings for any mesh shape.
+
+The same machinery serves the event-serving fleet (DESIGN.md §17): a
+:class:`~repro.serve.sharded.ShardedSessionPool` restoring after a shard
+loss lands each surviving shard's checkpointed engine carry on its own mesh
+with :func:`reshard_tree` under the engine's ``carry_pspecs()``.
 """
 
 from __future__ import annotations
@@ -18,6 +23,24 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 
 from repro.distributed import sharding as shd
+
+__all__ = ["remesh_pspecs", "reshard_state", "reshard_tree"]
+
+
+def reshard_tree(tree, pspec_tree, new_mesh: Mesh):
+    """device_put every leaf of ``tree`` onto ``new_mesh`` under the matching
+    :class:`~jax.sharding.PartitionSpec` of ``pspec_tree``.
+
+    The generic core of :func:`reshard_state`, shared with the serving
+    fleet: a checkpoint written under mesh A (or host memory) lands sharded
+    on mesh B without shape changes — elasticity is a placement move, never
+    a value move.
+    """
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(put, tree, pspec_tree)
 
 
 def remesh_pspecs(model, params_shapes, new_mesh: Mesh):
@@ -44,11 +67,7 @@ def remesh_pspecs(model, params_shapes, new_mesh: Mesh):
 def reshard_state(state, pspec_tree_params, new_mesh: Mesh):
     """device_put an in-memory state onto the new mesh (for live migration;
     checkpoint-restore covers the crash path)."""
-
-    def put(x, spec):
-        return jax.device_put(x, NamedSharding(new_mesh, spec))
-
-    params = jax.tree.map(put, state["params"], pspec_tree_params)
+    params = reshard_tree(state["params"], pspec_tree_params, new_mesh)
     # optimizer moments follow their parameter's sharding; scalars replicate
     def put_like(x):
         return jax.device_put(x)

@@ -61,7 +61,56 @@ __all__ = [
     "SlotError",
     "CheckpointMismatchError",
     "build_poker_engine",
+    "session_from_meta",
 ]
+
+
+def session_from_meta(
+    sm: dict, models: dict, source_factory=None, slot: int | None = None
+) -> DvsSession:
+    """Rebuild a :class:`DvsSession` from its checkpoint meta blob entry.
+
+    Shared by :meth:`AerSessionPool.load_snapshot_tree` and the fleet
+    restore path (serve/sharded.py), which redistributes a lost shard's
+    sessions onto surviving shards from the same per-slot meta entries.
+    ``models`` is the restoring pool's resident-model dict (names checked);
+    sources that are not a :class:`DvsStreamSource` need ``source_factory``.
+    """
+    src_meta = sm["source"]
+    if src_meta.get("kind") == "dvs_stream":
+        source = DvsStreamSource(
+            DvsStreamConfig(**src_meta["cfg"]),
+            session_id=src_meta["session_id"],
+        )
+    elif source_factory is not None:
+        source = source_factory(sm)
+    else:
+        raise TypeError(
+            f"slot {slot}'s source kind {src_meta.get('kind')!r} is not "
+            "serializable — pass source_factory to rebuild it"
+        )
+    model = sm.get("model")
+    if model is None and len(models) == 1:
+        model = next(iter(models))
+    if model not in models:
+        raise CheckpointMismatchError(
+            f"slot {slot}'s session ran on model {model!r}, which is "
+            f"not resident in the restoring pool ({list(models)})"
+        )
+    return DvsSession(
+        session_id=sm["session_id"],
+        source=source,
+        label=sm["label"],
+        model=model,
+        tenant=sm.get("tenant"),
+        step=int(sm["step"]),
+        counts=None
+        if sm["counts"] is None
+        else np.asarray(sm["counts"], dtype=np.float64),
+        dropped=int(sm["dropped"]),
+        link_dropped=int(sm["link_dropped"]),
+        error=sm["error"],
+    )
 
 
 class PoolFullError(RuntimeError):
@@ -134,6 +183,10 @@ class AerServeConfig:
     min_steps: int = 2  # never decide before this many steps
     max_steps: int = 60  # forced argmax decision after this many steps
     on_invalid: str = "raise"  # malformed-packet policy (see CompiledCnn)
+    # fairness: at most this many of one tenant's sessions resident at once;
+    # the serve() backfill skips over a capped tenant's queued sessions so a
+    # burst cannot monopolize freed slots (None = unlimited)
+    max_inflight_per_tenant: int | None = None
 
 
 @dataclasses.dataclass
@@ -147,12 +200,20 @@ class DvsSession:
     # a session on a different model recompiles nothing (DESIGN.md §16).
     # ``None`` resolves to the pool's sole resident model at admission.
     model: str | None = None
+    # fairness identity for max_inflight_per_tenant: many sessions may share
+    # one tenant (an account / sensor fleet). None = the session is its own
+    # tenant, which makes the cap a no-op for anonymous traffic.
+    tenant: int | str | None = None
     # runtime state, owned by the pool
     step: int = 0  # steps since admission (= the source's cursor)
     counts: np.ndarray | None = None  # [n_classes] cumulative output spikes
     dropped: int = 0  # cumulative AER-queue drops
     link_dropped: int = 0  # cumulative fabric link-FIFO drops
     error: str | None = None  # input fault: the session failed, not the pool
+
+
+def _tenant_of(sess: DvsSession):
+    return sess.session_id if sess.tenant is None else sess.tenant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -535,6 +596,45 @@ class AerSessionPool:
             self.carry = self.engine.reset_slots(self.carry, mask)
         return results
 
+    # -- cross-pool migration (DESIGN.md §17) ------------------------------
+    def extract_session(self, slot: int) -> tuple[DvsSession, SlotCarry]:
+        """Remove the tenant in ``slot`` mid-flight WITH its fabric state.
+
+        The source half of live migration: the returned ``(session,
+        SlotCarry)`` pair is the complete transferable unit — readout
+        accumulators and stream cursor ride on the session, neuron state /
+        previous-step spikes / phase-normalized delay-line contents in the
+        :class:`~repro.core.event_engine.SlotCarry`. The vacated slot is
+        wiped exactly like an eviction, so the departing tenant leaks
+        nothing to the slot's next occupant.
+        """
+        if not 0 <= slot < self.cfg.pool_size:
+            raise SlotError(f"slot {slot} out of range")
+        sess = self.slots[slot]
+        if sess is None:
+            raise SlotError(f"slot {slot} is not occupied")
+        sc = self.engine.extract_slots(self.carry, [slot])
+        self.slots[slot] = None
+        mask = np.zeros(self.cfg.pool_size, dtype=bool)
+        mask[slot] = True
+        self.carry = self.engine.reset_slots(self.carry, mask)
+        return sess, sc
+
+    def inject_session(self, sess: DvsSession, sc: SlotCarry) -> int:
+        """Admit a mid-flight session WITH its serialized fabric state.
+
+        The destination half of live migration, inverse of
+        :meth:`extract_session` — the destination pool may run on a
+        different device mesh and a different delivery mode; ``splice_slots``
+        re-buckets the delay horizon and re-rotates the ring phase, so the
+        transfer is bit-exact whenever the two engines share tables and
+        ``max_delay`` (DESIGN.md §15's ladder, extended to fleet moves in
+        §17). Returns the destination slot.
+        """
+        slot = self.admit_restored(sess)
+        self.carry = self.engine.splice_slots(self.carry, [slot], sc)
+        return slot
+
     # -- stepping ----------------------------------------------------------
     def step(self) -> np.ndarray:
         """Advance every slot one engine timestep; returns spikes ``[P, N]``.
@@ -548,6 +648,22 @@ class AerSessionPool:
         session* — the tenant is marked errored (terminated at the next
         eviction sweep) and sees zero input, while every other tenant's
         step proceeds. One bad sensor never takes down the pool.
+
+        Split as :meth:`begin_step` (host-side input gather + engine
+        dispatch, returns without blocking on the device) and
+        :meth:`finish_step` (reads the results back and applies them to the
+        sessions): a multi-shard fleet dispatches every shard's step before
+        collecting any, so the shards' device work overlaps
+        (serve/sharded.py, DESIGN.md §17).
+        """
+        return self.finish_step(self.begin_step())
+
+    def begin_step(self):
+        """Gather this step's inputs and dispatch the engine step.
+
+        Returns an opaque handle for :meth:`finish_step`. JAX dispatch is
+        asynchronous, so this returns as soon as the step is enqueued on the
+        device — nothing here blocks on the result.
         """
         multi = len(self.models) > 1
         acts = []
@@ -579,6 +695,10 @@ class AerSessionPool:
                 acts.append(full)
         inp = np.stack(acts)  # [P, nc_total, K_max]
         self.carry, out = self.engine.step(self.carry, inp)
+        return out
+
+    def finish_step(self, out) -> np.ndarray:
+        """Block on a dispatched step's results and apply them per session."""
         spikes, stats = out if isinstance(out, tuple) else (out, None)
         spikes = np.asarray(spikes)
         self.last_stats = stats  # watchdog raw material (serve/health.py)
@@ -644,6 +764,7 @@ class AerSessionPool:
             "session_id": sess.session_id,
             "label": sess.label,
             "model": sess.model,
+            "tenant": sess.tenant,
             "step": sess.step,
             "counts": None if sess.counts is None else sess.counts.tolist(),
             "dropped": sess.dropped,
@@ -652,17 +773,16 @@ class AerSessionPool:
             "source": source,
         }
 
-    def checkpoint(self, ckptr, step: int | None = None, blocking: bool = False):
-        """Snapshot the pool into ``ckptr`` (checkpoint/checkpointer.py).
+    def snapshot_tree(self) -> dict:
+        """The pool's complete checkpointable state as ONE pytree.
 
-        One atomic tree: the raw engine carry — neuron state, previous-step
-        spikes, and the complete fabric delay-line state (ring + cursor, or
-        the roll in-flight buffer) — plus every live session's readout
-        accumulators and stream descriptor as a JSON blob. A
-        :class:`DvsStreamSource` is pure in its step counter, so storing
-        ``(cfg, session_id, step)`` replays the exact event stream on
-        restore; a restored pool therefore resumes *bit-exactly* on an
-        engine of the same geometry. ``step`` defaults to ``n_steps``.
+        ``{"carry": <engine carry>, "session_meta": <uint8 JSON blob>}`` —
+        the raw engine carry (neuron state, previous-step spikes, and the
+        complete fabric delay-line state: ring + cursor, or the roll
+        in-flight buffer) plus every live session's readout accumulators and
+        stream descriptor. :meth:`checkpoint` saves exactly this tree; a
+        sharded fleet nests one per shard under its fleet tree
+        (serve/sharded.py, DESIGN.md §17).
         """
         meta = {
             "n_steps": self.n_steps,
@@ -675,8 +795,57 @@ class AerSessionPool:
             ],
         }
         blob = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8).copy()
-        tree = {"carry": self.carry, "session_meta": blob}
-        ckptr.save(self.n_steps if step is None else step, tree, blocking=blocking)
+        return {"carry": self.carry, "session_meta": blob}
+
+    def load_snapshot_tree(self, tree, source_factory=None) -> None:
+        """Apply a :meth:`snapshot_tree` onto THIS (freshly built) pool.
+
+        Validates pool size and the serving-geometry fingerprint before any
+        state is spliced (:class:`CheckpointMismatchError` on mismatch — a
+        failed restore never corrupts the pool), then installs the carry and
+        rebuilds every live session from its meta blob.
+        """
+        meta = json.loads(
+            np.asarray(tree["session_meta"]).astype(np.uint8).tobytes().decode()
+        )
+        if int(meta["pool_size"]) != self.cfg.pool_size:
+            raise CheckpointMismatchError(
+                f"checkpoint was taken at pool_size={meta['pool_size']}, "
+                f"restoring into pool_size={self.cfg.pool_size}"
+            )
+        want = meta.get("fingerprint")
+        if want is not None and want != self.fingerprint():
+            raise CheckpointMismatchError(
+                f"checkpoint fingerprint {want[:12]}... does not match the "
+                f"restoring pool's {self.fingerprint()[:12]}... — the engine "
+                "geometry, delivery mode, or resident model set changed "
+                "since the snapshot (restore into the matching pool, or "
+                "migrate with clone_onto after a bit-exact restore)"
+            )
+        self.carry = tree["carry"]
+        self.n_steps = int(meta["n_steps"])
+        self.quarantined = set(int(i) for i in meta["quarantined"])
+        for i, sm in enumerate(meta["slots"]):
+            if sm is None:
+                continue
+            self.slots[i] = session_from_meta(
+                sm, self.models, source_factory=source_factory, slot=i
+            )
+
+    def checkpoint(self, ckptr, step: int | None = None, blocking: bool = False):
+        """Snapshot the pool into ``ckptr`` (checkpoint/checkpointer.py).
+
+        One atomic tree (:meth:`snapshot_tree`). A :class:`DvsStreamSource`
+        is pure in its step counter, so storing ``(cfg, session_id, step)``
+        replays the exact event stream on restore; a restored pool therefore
+        resumes *bit-exactly* on an engine of the same geometry. ``step``
+        defaults to ``n_steps``.
+        """
+        ckptr.save(
+            self.n_steps if step is None else step,
+            self.snapshot_tree(),
+            blocking=blocking,
+        )
 
     @classmethod
     def restore(
@@ -721,79 +890,61 @@ class AerSessionPool:
                 f"checkpoint at step {step} does not fit the restoring "
                 f"engine's carry: {e}"
             ) from e
-        meta = json.loads(
-            np.asarray(tree["session_meta"]).astype(np.uint8).tobytes().decode()
-        )
-        if int(meta["pool_size"]) != cfg.pool_size:
-            raise CheckpointMismatchError(
-                f"checkpoint was taken at pool_size={meta['pool_size']}, "
-                f"restoring into pool_size={cfg.pool_size}"
-            )
-        want = meta.get("fingerprint")
-        if want is not None and want != pool.fingerprint():
-            raise CheckpointMismatchError(
-                f"checkpoint fingerprint {want[:12]}... does not match the "
-                f"restoring pool's {pool.fingerprint()[:12]}... — the engine "
-                "geometry, delivery mode, or resident model set changed "
-                "since the snapshot (restore into the matching pool, or "
-                "migrate with clone_onto after a bit-exact restore)"
-            )
-        pool.carry = tree["carry"]
-        pool.n_steps = int(meta["n_steps"])
-        pool.quarantined = set(int(i) for i in meta["quarantined"])
-        for i, sm in enumerate(meta["slots"]):
-            if sm is None:
-                continue
-            src_meta = sm["source"]
-            if src_meta.get("kind") == "dvs_stream":
-                source = DvsStreamSource(
-                    DvsStreamConfig(**src_meta["cfg"]),
-                    session_id=src_meta["session_id"],
-                )
-            elif source_factory is not None:
-                source = source_factory(sm)
-            else:
-                raise TypeError(
-                    f"slot {i}'s source kind {src_meta.get('kind')!r} is not "
-                    "serializable — pass source_factory to rebuild it"
-                )
-            model = sm.get("model")
-            if model is None and len(pool.models) == 1:
-                model = next(iter(pool.models))
-            if model not in pool.models:
-                raise CheckpointMismatchError(
-                    f"slot {i}'s session ran on model {model!r}, which is "
-                    f"not resident in the restoring pool ({list(pool.models)})"
-                )
-            pool.slots[i] = DvsSession(
-                session_id=sm["session_id"],
-                source=source,
-                label=sm["label"],
-                model=model,
-                step=int(sm["step"]),
-                counts=None
-                if sm["counts"] is None
-                else np.asarray(sm["counts"], dtype=np.float64),
-                dropped=int(sm["dropped"]),
-                link_dropped=int(sm["link_dropped"]),
-                error=sm["error"],
-            )
+        pool.load_snapshot_tree(tree, source_factory=source_factory)
         return pool
 
     # -- drain loop --------------------------------------------------------
+    def admit_next(self, pending: deque) -> DvsSession | None:
+        """Admit the first admissible session from the ``pending`` queue.
+
+        FIFO except for fairness: with ``max_inflight_per_tenant`` set, a
+        session whose tenant already holds that many slots is skipped (it
+        keeps its queue position) and the first under-cap session behind it
+        is admitted instead — one tenant submitting a burst can never
+        monopolize backfilled slots (DESIGN.md §17). Returns the admitted
+        session, or ``None`` when nothing is admissible (queue empty, no
+        free slot, or every queued tenant at cap — slots then stay free for
+        this step rather than violate the cap).
+        """
+        if not pending or not self.free_slots:
+            return None
+        cap = self.cfg.max_inflight_per_tenant
+        pick = 0
+        if cap is not None:
+            inflight: dict = {}
+            for s in self.slots:
+                if s is not None:
+                    t = _tenant_of(s)
+                    inflight[t] = inflight.get(t, 0) + 1
+            pick = next(
+                (
+                    i
+                    for i, s in enumerate(pending)
+                    if inflight.get(_tenant_of(s), 0) < cap
+                ),
+                None,
+            )
+            if pick is None:
+                return None
+        sess = pending[pick]
+        del pending[pick]
+        self.admit(sess)
+        return sess
+
     def serve(self, sessions) -> list[SessionResult]:
         """Serve ``sessions`` to completion with continuous batching.
 
-        Admissions backfill free slots every step, evictions happen the
-        step a tenant decides — the pool never drains between users, which
-        is what keeps utilization (and sessions/s) flat under sustained
-        load. Results are returned in completion order.
+        Admissions backfill free slots every step (FIFO, modulo the
+        per-tenant in-flight cap — see :meth:`admit_next`), evictions happen
+        the step a tenant decides — the pool never drains between users,
+        which is what keeps utilization (and sessions/s) flat under
+        sustained load. Results are returned in completion order.
         """
         pending = deque(sessions)
         results: list[SessionResult] = []
         while pending or self.occupied:
-            while pending and self.free_slots:
-                self.admit(pending.popleft())
+            while self.admit_next(pending) is not None:
+                pass
             self.step()
             finished = self.finished_slots()
             if finished:

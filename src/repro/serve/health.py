@@ -38,6 +38,7 @@ __all__ = [
     "WatchdogConfig",
     "FaultEvent",
     "Watchdog",
+    "FleetWatchdog",
     "serve_resilient",
     "migrate_pool",
 ]
@@ -183,6 +184,40 @@ class Watchdog:
         elif rate < cfg.link_drop_threshold / 2:
             self._degraded_flagged = False
         return events
+
+
+class FleetWatchdog:
+    """Health scan over a :class:`~repro.serve.sharded.ShardedSessionPool`.
+
+    One independent :class:`Watchdog` per shard — progress trackers and
+    drop windows must not mix across shards, whose pools step different
+    tenants on different meshes. :meth:`observe` scans every live shard and
+    returns ``(shard_id, event)`` pairs; a shard that dies between steps
+    simply drops out of the scan (its watchdog state is kept in case the
+    shard index is later recovered onto a replacement pool).
+    """
+
+    def __init__(self, cfg: WatchdogConfig | None = None):
+        self.cfg = cfg or WatchdogConfig()
+        self._per_shard: dict[int, Watchdog] = {}
+
+    def shard_watchdog(self, shard_id: int) -> Watchdog:
+        if shard_id not in self._per_shard:
+            self._per_shard[shard_id] = Watchdog(self.cfg)
+        return self._per_shard[shard_id]
+
+    def observe(self, fleet) -> list[tuple[int, FaultEvent]]:
+        events: list[tuple[int, FaultEvent]] = []
+        for i in fleet.live_shards():
+            wd = self.shard_watchdog(i)
+            events.extend((i, ev) for ev in wd.observe(fleet.pools[i]))
+        return events
+
+    def link_drop_rate(self) -> float:
+        """Worst windowed link-drop rate across shards (the fleet's health
+        is gated by its sickest shard, not the average)."""
+        rates = [w.link_drop_rate() for w in self._per_shard.values()]
+        return max(rates) if rates else 0.0
 
 
 def _failed_result(sess: DvsSession, error: str) -> SessionResult:

@@ -297,6 +297,56 @@ def test_evict_many_single_reset():
     assert len(pool.evict_many([slots[2], slots[2]])) == 1
 
 
+def test_per_tenant_inflight_cap_schedules_fairly():
+    """max_inflight_per_tenant: a tenant with many queued sessions cannot
+    occupy every slot — capped admission interleaves tenants; without the
+    cap, FIFO admission serves the hog's whole backlog first. Deterministic
+    (same symbol -> same latency for every session), so completion order is
+    the exact test vector."""
+    def sessions():
+        # tenant "A" floods 4 sessions; tenant "B" queues 2 behind them
+        return [
+            DvsSession(
+                i,
+                DvsStreamSource(
+                    DvsStreamConfig(symbol=1, events_per_step=16, seed=9),
+                    session_id=i,
+                ),
+                label=1,
+                tenant="A" if i < 4 else "B",
+            )
+            for i in range(6)
+        ]
+
+    cc = compile_poker_cnn()
+
+    def serve(cap):
+        pool = AerSessionPool(
+            cc,
+            build_poker_engine(cc.tables),
+            AerServeConfig(
+                pool_size=2, max_steps=25, max_inflight_per_tenant=cap
+            ),
+        )
+        return [r.session_id for r in pool.serve(sessions())]
+
+    assert serve(None) == [0, 1, 2, 3, 4, 5]  # FIFO: the hog wins
+    assert serve(1) == [0, 4, 1, 5, 2, 3]  # capped: tenants interleave
+
+
+def test_tenant_cap_never_deadlocks_single_tenant():
+    """A cap of 1 with only one tenant still drains every session (slots go
+    idle rather than starve, and the queue keeps moving)."""
+    cc = compile_poker_cnn()
+    pool = AerSessionPool(
+        cc,
+        build_poker_engine(cc.tables),
+        AerServeConfig(pool_size=2, max_steps=25, max_inflight_per_tenant=1),
+    )
+    res = pool.serve([_session(i, 1) for i in range(3)])
+    assert [r.session_id for r in res] == [0, 1, 2]
+
+
 def test_pool_rejects_mismatched_engine():
     cc = compile_poker_cnn()
     other = EventEngine(_small_net(np.random.default_rng(1)))
