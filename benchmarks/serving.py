@@ -57,6 +57,16 @@ def _sessions(n: int, seed: int = 11) -> list[DvsSession]:
     ]
 
 
+def _tail_ms(lat: np.ndarray, dt_ms: float) -> str:
+    """Labeled tail latency: true p99 needs samples — interpolating the 99th
+    percentile from a couple dozen latencies is noise dressed as a
+    percentile, so below 100 samples the tail is reported as the labeled
+    max instead."""
+    if lat.size >= 100:
+        return f"p99_{np.percentile(lat, 99) * dt_ms:.0f}ms"
+    return f"max_{lat.max() * dt_ms:.0f}ms"
+
+
 def run() -> list[tuple[str, float, str]]:
     out = []
     # throughput benchmark: the default readout wiring decides just as fast
@@ -85,13 +95,23 @@ def run() -> list[tuple[str, float, str]]:
             lat = np.array([r.latency_steps for r in results], dtype=np.float64)
             sess_s = len(results) / wall
             p50 = np.percentile(lat, 50) * dt_ms
-            p99 = np.percentile(lat, 99) * dt_ms
             step_us[(backend, pool_size)] = wall / steps * 1e6
             out.append(
                 (
                     f"serving_{backend}_pool{pool_size}",
                     wall / steps * 1e6,
-                    f"{sess_s:.1f}sess_s_p50_{p50:.0f}ms_p99_{p99:.0f}ms",
+                    f"{sess_s:.1f}sess_s_p50_{p50:.0f}ms_{_tail_ms(lat, dt_ms)}",
+                )
+            )
+            # throughput as the ROW VALUE: the row above records step-us in
+            # the us_per_call column (all serving_* rows do), so a tracker
+            # diffing row values never saw sessions/s regress — these
+            # sibling rows put the headline number where values are compared
+            out.append(
+                (
+                    f"serving_{backend}_pool{pool_size}_sess_s",
+                    sess_s,
+                    f"{sess_s:.1f}sess_s_value_row",
                 )
             )
     # the realism-tax headline (DESIGN.md §14): executable-fabric serving
@@ -265,9 +285,99 @@ def run() -> list[tuple[str, float, str]]:
                     wall / steps * 1e6,
                     f"{len(results) / wall:.1f}sess_s"
                     f"_p50_{np.percentile(lat, 50) * dt_ms:.0f}ms"
-                    f"_p99_{np.percentile(lat, 99) * dt_ms:.0f}ms",
+                    f"_{_tail_ms(lat, dt_ms)}",
                 )
             )
+            out.append(
+                (
+                    f"serving_sharded_pool{total}_dev{dev}_sess_s",
+                    len(results) / wall,
+                    f"{len(results) / wall:.1f}sess_s_value_row",
+                )
+            )
+
+    # profile-guided re-placement (DESIGN.md §18): a pool compiled with a
+    # deliberately scattered ("stale") placement under tight link FIFOs
+    # drops events; the ReplacementController observes the measured
+    # (cluster, cluster) traffic, re-runs optimize_placement on it, and
+    # swaps the re-placed tables in as a fresh model version under the live
+    # sessions. The row records link drops over equal observation windows
+    # before and after the swap, and whether the mid-flight cohort stayed
+    # byte-equal to an undisturbed control pool across the swap. CI
+    # bench-smoke parses drops_pre/drops_post and asserts post <= pre.
+    from repro.serve.health import ReplacementConfig, ReplacementController
+
+    pool_size = pools[0]
+    window = 8 if SMOKE else 16
+    # corners-first placement maximizes mesh distance between the clusters
+    # that talk (the compiled CNN's traffic is layer-local)
+    stale = np.array([0, 8, 2, 6, 4, 5][: cc.tables.n_clusters], np.int32)
+    cc_stale = dataclasses.replace(
+        cc, tables=dataclasses.replace(cc.tables, tile_of_cluster=stale)
+    )
+    fo = {"link_capacity": 2, "per_link_stats": True}
+    rp_cfg = AerServeConfig(pool_size=pool_size, max_steps=10**6)
+
+    def _rp_pool():
+        return AerSessionPool.from_models(
+            {"m": cc_stale}, rp_cfg, backend="fabric", fabric_options=dict(fo)
+        )
+
+    pool_a, pool_b = _rp_pool(), _rp_pool()  # b: undisturbed control
+    for p in (pool_a, pool_b):
+        for s in _sessions(pool_size, seed=23):
+            s.model = "m"
+            p.admit(s)
+    for _ in range(window):
+        pool_a.step()
+        pool_b.step()
+    drops_pre = float(pool_a.profile.total_link_dropped)
+    ctl = ReplacementController(
+        pool_a, cfg=ReplacementConfig(min_steps=window // 2, cooldown_steps=0)
+    )
+    drift = ctl.drift()
+    t0 = time.perf_counter()
+    swap = ctl.maybe_replace(force=True)
+    swap_s = time.perf_counter() - t0
+    assert swap is not None, "replacement_drift: forced swap did not happen"
+    # mid-flight cohort keeps serving on the old version through the swap —
+    # byte-equal to the control pool that never swapped
+    for _ in range(window // 2):
+        pool_a.step()
+        pool_b.step()
+    bitexact = all(
+        sa is not None
+        and sb is not None
+        and np.array_equal(sa.counts, sb.counts)
+        and sa.dropped == sb.dropped
+        and sa.link_dropped == sb.link_dropped
+        for sa, sb in zip(pool_a.slots, pool_b.slots)
+    )
+    # drain the old cohort, then measure the same window on the re-placed
+    # version only (drain_retired's rebind restarts the observation window)
+    for i, s in enumerate(list(pool_a.slots)):
+        if s is not None:
+            pool_a.evict(i)
+    ctl.drain_retired()
+    cohort2 = _sessions(pool_size, seed=23)
+    for s in cohort2:
+        pool_a.admit(ctl.retarget(s))
+    steps0 = pool_a.n_steps
+    t0 = time.perf_counter()
+    for _ in range(window):
+        pool_a.step()
+    wall = time.perf_counter() - t0
+    drops_post = float(pool_a.profile.total_link_dropped)
+    ratio = drops_pre / max(drops_post, 1.0)
+    out.append(
+        (
+            f"replacement_drift_pool{pool_size}",
+            wall / (pool_a.n_steps - steps0) * 1e6,
+            f"drops_pre_{int(drops_pre)}_post_{int(drops_post)}_"
+            f"{ratio:.1f}x_fewer_drift_{drift:.2f}_bitexact_{int(bitexact)}_"
+            f"swap_{swap_s * 1e3:.0f}ms",
+        )
+    )
 
     # live-migration overhead (§17 layer 3): cost of moving one mid-flight
     # tenant between shards, against the fleet step it displaces

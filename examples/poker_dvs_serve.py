@@ -73,7 +73,13 @@ def main():
     # the CAM words, so the tables are re-placed, never recompiled.
     geo2 = Geometry(grid_x=2, grid_y=2, cores_per_tile=2, neurons_per_core=256)
     art2 = artifact_from_tables(cc.tables, geo2, optimize=False)
-    cc2 = dataclasses.replace(cc, tables=art2.tables)
+    # the 2x2 placement binds to the 2x2 mesh, not the pool's shared serving
+    # fabric — placements compose all-or-none across residents (DESIGN.md
+    # §18), so the resident copy is stripped back to the fabric default and
+    # art2 keeps the feasibility story
+    cc2 = dataclasses.replace(
+        cc, tables=dataclasses.replace(art2.tables, tile_of_cluster=None)
+    )
     models = {"tableV-3x3": cc, "tableV-2x2": cc2}
     pool = AerSessionPool.from_models(
         models, AerServeConfig(pool_size=args.pool), backend=args.backend

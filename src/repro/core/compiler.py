@@ -77,6 +77,7 @@ __all__ = [
     "CompiledArtifact",
     "allocate_tags_reuse",
     "traffic_matrix",
+    "TrafficProfile",
     "placement_cost",
     "optimize_placement",
     "device_slab_placement",
@@ -153,6 +154,111 @@ def traffic_matrix(
     t = np.zeros((tables.n_clusters, tables.n_clusters), dtype=np.float64)
     np.add.at(t, (src // tables.cluster_size, src_dest[src, ent]), rates[src])
     return t
+
+
+@dataclasses.dataclass
+class TrafficProfile:
+    """Measured inter-cluster traffic, accumulated from per-link DeliveryStats.
+
+    The feedback half of the measure→optimize→recompile loop (DESIGN.md
+    §18): a fabric engine built with ``per_link_stats`` emits ``delivered``
+    per (src_cluster, dst_cluster) pair and ``link_dropped`` per directed
+    tile link; :meth:`observe` folds each step's stats in, and the
+    accumulated :meth:`matrix` is the *empirical* counterpart of
+    :func:`traffic_matrix` — under all-sources-spiking, drop-free traffic
+    the two are equal entry for entry (each delivered SRAM entry is one
+    unit of entry-weighted traffic; the conformance test locks this). Feed
+    :meth:`matrix` straight into :func:`optimize_placement`, or
+    :meth:`rates` into :func:`traffic_matrix` when the tables' entry
+    structure should re-derive the matrix.
+    """
+
+    n_clusters: int
+    n_tiles: int
+    pair_delivered: np.ndarray  # [nc, nc] cumulative delivered events
+    link_dropped: np.ndarray  # [T, T] cumulative per-directed-link drops
+    dropped: float = 0.0  # cumulative AER-queue drops
+    steps: int = 0  # observed engine steps
+    last: np.ndarray | None = None  # most recent observation's [nc, nc]
+
+    @classmethod
+    def empty(cls, n_clusters: int, n_tiles: int) -> "TrafficProfile":
+        return cls(
+            n_clusters=int(n_clusters),
+            n_tiles=int(n_tiles),
+            pair_delivered=np.zeros((n_clusters, n_clusters), dtype=np.float64),
+            link_dropped=np.zeros((n_tiles, n_tiles), dtype=np.float64),
+        )
+
+    def observe(self, stats, steps: int = 1) -> None:
+        """Fold one step's (or one stacked run's) per-link DeliveryStats in.
+
+        ``stats.delivered`` must be the per-pair ``[..., nc*nc]`` form and
+        ``stats.link_dropped`` the per-link ``[..., T*T]`` form — leading
+        batch/time axes are summed (every stream shares the fabric).
+        ``steps`` is how many engine steps the observation spans.
+        """
+        nc, t = self.n_clusters, self.n_tiles
+        d = np.asarray(stats.delivered)
+        if d.ndim == 0 or d.shape[-1] != nc * nc:
+            raise ValueError(
+                f"delivered has shape {d.shape}, expected [..., {nc * nc}] — "
+                "was the engine built with per_link_stats?"
+            )
+        pair = d.reshape(-1, nc * nc).sum(0).astype(np.float64).reshape(nc, nc)
+        ld = np.asarray(stats.link_dropped)
+        if ld.ndim == 0 or ld.shape[-1] != t * t:
+            raise ValueError(
+                f"link_dropped has shape {ld.shape}, expected [..., {t * t}] — "
+                "was the engine built with per_link_stats?"
+            )
+        self.pair_delivered += pair
+        self.last = pair
+        self.link_dropped += (
+            ld.reshape(-1, t * t).sum(0).astype(np.float64).reshape(t, t)
+        )
+        self.dropped += float(np.asarray(stats.dropped).sum())
+        self.steps += int(steps)
+
+    @property
+    def total_link_dropped(self) -> float:
+        return float(self.link_dropped.sum())
+
+    def matrix(self) -> np.ndarray:
+        """Observed traffic ``[nc, nc]`` in events per step (empirical
+        :func:`traffic_matrix`)."""
+        return self.pair_delivered / max(self.steps, 1)
+
+    def rates(self, tables: RoutingTables) -> np.ndarray:
+        """Per-neuron empirical rate vector for :func:`traffic_matrix`.
+
+        The fabric observes traffic per *cluster pair*, so the estimate is
+        uniform within a source cluster: the cluster's observed events per
+        step spread over its occupied SRAM entries. Exact whenever spiking
+        is uniform within each cluster (e.g. the conformance workload);
+        otherwise the best rank-respecting estimate the stats carry.
+        """
+        entries = (np.asarray(tables.src_tag) >= 0).sum(1).astype(np.float64)
+        cs = tables.cluster_size
+        per_cluster = entries.reshape(self.n_clusters, cs).sum(1)
+        row = self.pair_delivered.sum(1) / max(self.steps, 1)
+        r = np.divide(
+            row, per_cluster, out=np.zeros_like(row), where=per_cluster > 0
+        )
+        return np.repeat(r, cs)
+
+    def drift(self, assumed: np.ndarray) -> float:
+        """Total-variation distance between the observed and assumed traffic
+        distributions, in ``[0, 1]`` (0 = identical shape, 1 = disjoint).
+        Returns 0.0 while either side is empty — no evidence, no drift."""
+        obs = self.pair_delivered
+        a = np.asarray(assumed, dtype=np.float64)
+        if a.shape != obs.shape:
+            raise ValueError(f"assumed has shape {a.shape}, expected {obs.shape}")
+        so, sa = obs.sum(), a.sum()
+        if so <= 0 or sa <= 0:
+            return 0.0
+        return float(0.5 * np.abs(obs / so - a / sa).sum())
 
 
 def placement_cost(

@@ -64,6 +64,9 @@ __all__ = [
     "get_backend",
     "available_backends",
     "backend_deliver",
+    "AutotuneDecision",
+    "autotune_backend",
+    "autotune_candidates",
 ]
 
 _REGISTRY: dict[str, type] = {}
@@ -429,6 +432,7 @@ class FabricBackend(DispatchBackend):
         block_c: int = 16,
         interpret: bool | None = None,
         faults=None,  # faults.FaultSpec | None — injected topology faults (§15)
+        per_link_stats: bool = False,  # keep drop/delivered attribution (§18)
     ):
         from repro.core.routing import Fabric
 
@@ -441,6 +445,7 @@ class FabricBackend(DispatchBackend):
         self.block_c = block_c
         self.interpret = interpret
         self.faults = faults
+        self.per_link_stats = bool(per_link_stats)
         if faults is not None:
             faults.validate(self.fabric)
         self._models: dict[int, tuple] = {}
@@ -599,6 +604,8 @@ class FabricBackend(DispatchBackend):
             syn_onehot=syn_onehot,
             block_c=self.block_c,
             interpret=self.interpret,
+            per_link_stats=self.per_link_stats,
+            n_tiles=model.n_tiles,
         )
 
     def cam_match(self, activity, cam_tag, cam_syn, cluster_size, syn_onehot=None):
@@ -647,6 +654,7 @@ class FabricBackend(DispatchBackend):
             latency_s=arrs["latency_s"],
             energy_j=arrs["energy_j"],
             entry_alive=entry_alive,
+            per_link_stats=self.per_link_stats,
         )
         a, new_inflight = advance_inflight(route.buffer, inflight, model.max_delay)
         if external_activity is not None:
@@ -829,3 +837,156 @@ class ShardedBackend(DispatchBackend):
         if with_stats:
             return drive, DeliveryStats(dropped=dropped.reshape(batch_shape))
         return drive
+
+
+# ---------------------------------------------------------------------------
+# dispatch autotuner — measured dense/queued/fused crossover (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AutotuneDecision:
+    """Outcome of one :func:`autotune_backend` pass.
+
+    ``winner`` is the measured-fastest candidate; ``backend`` / ``dense``
+    are how the engine realizes it (registry backend name + whether the AER
+    queue compaction is bypassed — the dense path still reports zero-drop
+    stats, so the step's output contract is unchanged). ``measurements``
+    records every candidate's best-of-``iters`` wall time in µs, in
+    canonical candidate order, so the decision is auditable and the engine
+    fingerprint can carry it.
+    """
+
+    winner: str
+    backend: str
+    dense: bool
+    activity: float
+    batch: int
+    measurements: tuple[tuple[str, float], ...]
+
+    def token(self) -> str:
+        """Compact fingerprint component (decision, not timings)."""
+        return f"autotune:{self.winner}:act{self.activity:g}:B{self.batch}"
+
+
+# candidate -> (registry backend, bypass queue compaction)
+_AUTOTUNE_IMPL = {
+    "dense": ("reference", True),
+    "queued": ("reference", False),
+    "fused": ("fused", False),
+    # fabric_ring is measurable only via an injected measurement (timing it
+    # needs a ring carry); it maps onto the fabric backend's default mode
+    "fabric_ring": ("fabric", False),
+}
+
+
+def autotune_candidates() -> tuple[str, ...]:
+    return tuple(_AUTOTUNE_IMPL)
+
+
+def autotune_backend(
+    src_tag,
+    src_dest,
+    cam_tag,
+    cam_syn,
+    cluster_size: int,
+    k_tags: int,
+    *,
+    activity: float = 0.1,
+    batch: int = 8,
+    queue_capacity: int | None = None,
+    candidates: tuple[str, ...] = ("dense", "queued", "fused"),
+    measure: dict[str, float] | None = None,
+    iters: int = 3,
+    seed: int = 0,
+    tol: float = 0.05,
+) -> AutotuneDecision:
+    """Measure the dense/queued/fused crossover at one (activity, B) point.
+
+    Times each candidate's jitted delivery on a deterministic synthetic
+    spike batch (``batch`` streams at ``activity`` fraction active, drawn
+    from ``seed``) and returns the winner as an :class:`AutotuneDecision`.
+    ``measure`` injects known timings per candidate (µs) — injected
+    candidates are not re-timed, so a fully-injected call is deterministic
+    and timing-free (the conformance tests use this, and benchmarks use it
+    to add a ``fabric_ring`` figure measured elsewhere). The winner is the
+    *earliest* candidate within ``tol`` of the measured fastest, not the
+    strict argmin: at a genuine crossover two candidates time equal and
+    wall-clock jitter would flip the argmin between runs, whereas the
+    noise band makes the decision stable (and exact ties break in
+    ``candidates`` order either way).
+
+    ``queue_capacity`` should be the engine's actual queue depth: the
+    queued candidate is measured under exactly the compaction the engine
+    would run. With ``None`` (or a capacity at/above the event count) the
+    queued path degenerates to dense — the lossless-queue shortcut — so
+    the tuner records dense's timing for it instead of racing two
+    timings of the same program, and the dead heat resolves to ``dense``
+    by construction.
+    """
+    import time as _time
+
+    for cand in candidates:
+        if cand not in _AUTOTUNE_IMPL:
+            raise ValueError(
+                f"unknown autotune candidate {cand!r}; known: {autotune_candidates()}"
+            )
+    measure = dict(measure or {})
+    timed = [c for c in candidates if c not in measure]
+    if timed:
+        n = src_tag.shape[0]
+        rng = np.random.default_rng(seed)
+        spikes = jnp.asarray(
+            (rng.random((int(batch), n)) < float(activity)).astype(np.float32)
+        )
+        st, sd = jnp.asarray(src_tag), jnp.asarray(src_dest)
+        ct, cs = jnp.asarray(cam_tag), jnp.asarray(cam_syn)
+        from repro.core.two_stage import precompute_syn_onehot
+
+        onehot = precompute_syn_onehot(cs)
+        # a lossless queue (capacity at/above the event count) makes the
+        # queued path computationally identical to dense — don't race two
+        # timings of the same program (a dead heat any load spike can flip):
+        # record dense's figure for queued after the loop
+        lossless = queue_capacity is None or int(queue_capacity) >= n
+        alias_queued = (
+            lossless and "queued" in timed
+            and ("dense" in measure or "dense" in timed)
+        )
+        for cand in timed:
+            if cand == "queued" and alias_queued:
+                continue
+            if cand == "fabric_ring":
+                raise ValueError(
+                    "fabric_ring can only be autotuned via an injected "
+                    "measurement (measure={'fabric_ring': us})"
+                )
+            bname, dense = _AUTOTUNE_IMPL[cand]
+            be = get_backend(bname)
+            qc = None if dense else queue_capacity
+
+            def fn(s, _be=be, _qc=qc):
+                return backend_deliver(
+                    _be, s, st, sd, ct, cs, cluster_size, k_tags,
+                    queue_capacity=_qc, syn_onehot=onehot,
+                )
+
+            jfn = jax.jit(fn)
+            jfn(spikes).block_until_ready()  # compile + warm outside timing
+            best = float("inf")
+            for _ in range(max(1, int(iters))):
+                t0 = _time.perf_counter()
+                jfn(spikes).block_until_ready()
+                best = min(best, _time.perf_counter() - t0)
+            measure[cand] = best * 1e6
+        if alias_queued:
+            measure["queued"] = measure["dense"]
+    best = min(measure[c] for c in candidates)
+    winner = next(c for c in candidates if measure[c] <= (1.0 + tol) * best)
+    backend, dense = _AUTOTUNE_IMPL[winner]
+    return AutotuneDecision(
+        winner=winner,
+        backend=backend,
+        dense=dense,
+        activity=float(activity),
+        batch=int(batch),
+        measurements=tuple((c, float(measure[c])) for c in candidates),
+    )

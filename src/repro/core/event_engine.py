@@ -144,6 +144,7 @@ class EventEngine:
         params: NeuronParams | None = None,
         backend: str | DispatchBackend = "reference",
         backend_options: dict | None = None,
+        autotune: dict | None = None,  # backend="auto" kwargs / {"decision": ...}
         queue_capacity: int | None = None,
         donate_carry: bool = False,
         fabric=None,  # routing.Fabric | dispatch.FabricBackend | None
@@ -160,10 +161,49 @@ class EventEngine:
         self.k_tags = tables.k_tags
         self.n_neurons = tables.n_neurons
         self.n_clusters = tables.n_clusters
-        self.backend = get_backend(backend, **(backend_options or {}))
         if queue_capacity is not None and queue_capacity <= 0:
             raise ValueError(f"queue_capacity must be positive, got {queue_capacity}")
         self.queue_capacity = queue_capacity
+        # dispatch autotuner (DESIGN.md §18): backend="auto" measures the
+        # dense/queued/fused crossover at this engine's (activity, B) point —
+        # or honors an injected AutotuneDecision — and builds the winner.
+        # ``dense`` winners bypass queue compaction in the step while keeping
+        # the (spikes, stats) output contract (stats read zero drops).
+        self.autotune_decision = None
+        self._autotune_dense = False
+        if backend == "auto":
+            if fabric is not None:
+                raise ValueError(
+                    "backend='auto' tunes the dense/queued/fused dispatch "
+                    "path; fabric engines deliver through the fabric model — "
+                    "pass an explicit backend"
+                )
+            from repro.core.dispatch import autotune_backend
+
+            opts = dict(autotune or {})
+            decision = opts.pop("decision", None)
+            if decision is None:
+                opts.setdefault("queue_capacity", queue_capacity)
+                decision = autotune_backend(
+                    tables.src_tag,
+                    tables.src_dest,
+                    tables.cam_tag,
+                    tables.cam_syn,
+                    self.cluster_size,
+                    self.k_tags,
+                    **opts,
+                )
+            elif opts:
+                raise ValueError(
+                    "autotune={'decision': ...} is exclusive with tuning "
+                    f"options {sorted(opts)}"
+                )
+            self.autotune_decision = decision
+            backend = decision.backend
+            self._autotune_dense = bool(decision.dense)
+        elif autotune:
+            raise ValueError("autotune options require backend='auto'")
+        self.backend = get_backend(backend, **(backend_options or {}))
         # fabric mode (DESIGN.md §11): delivery runs on a FabricBackend and
         # the step carry gains the in-flight delay-line buffer; cross-tile
         # events arrive late and link FIFOs can drop. Takes precedence over
@@ -372,7 +412,9 @@ class EventEngine:
             self.cluster_size,
             self.k_tags,
             external_activity=input_activity,
-            queue_capacity=self.queue_capacity,
+            # an autotuned "dense" winner bypasses compaction; the output
+            # contract still follows queue_capacity (stats read zero drops)
+            queue_capacity=None if self._autotune_dense else self.queue_capacity,
             syn_onehot=self.tables.cam_syn_onehot,
             with_stats=True,
         )
@@ -742,11 +784,16 @@ class EventEngine:
                 energy_j=arrs["energy_j"],
                 src_cluster_offset=offset,
                 cursor=cursor,
+                per_link_stats=self.fabric_backend.per_link_stats,
             )
             # hand every (delay, cluster) slab to its owner — the R3 hop
             buf = jax.lax.psum_scatter(
                 route.buffer, axis, scatter_dimension=route.buffer.ndim - 2, tiled=True
             )  # [..., max_delay + 1, nc_local, K]
+            # per_link_stats widens link_dropped/delivered with a trailing
+            # bin axis; the elementwise psum and the batch-only PartitionSpec
+            # (trailing dims replicated) treat both shapes uniformly — each
+            # device contributes its own sources' bins, summed fabric-wide
             stats = DeliveryStats(
                 dropped=jax.lax.psum(queue.dropped, axis),
                 link_dropped=jax.lax.psum(route.link_dropped, axis),

@@ -253,8 +253,13 @@ def concat_tables(
 
     All models must share ``cluster_size`` (slabs must tile the combined
     cluster grid uniformly — the engine derives cluster ids by integer
-    division). The combined table carries no placement; the registry stamps
-    one for the shared pool fabric.
+    division). Placements compose slab-wise: when every model carries a
+    ``tile_of_cluster`` the combined table concatenates them (each slab
+    keeps its compiled placement — live re-placement, DESIGN.md §18, swaps
+    one slab's placement without disturbing the others); when none does the
+    combined table carries no placement (the fabric's default applies); a
+    mix raises, because silently defaulting some slabs would move clusters
+    other models were placed around.
     """
     if not tables_list:
         raise ValueError("concat_tables needs at least one table")
@@ -293,6 +298,17 @@ def concat_tables(
             )
         )
         n0 = n1
+    placed = [t.tile_of_cluster is not None for t in tables_list]
+    if any(placed) and not all(placed):
+        raise ValueError(
+            "cannot concatenate tables with and without tile_of_cluster — "
+            "stamp an explicit placement on every model (or on none)"
+        )
+    tile_of_cluster = (
+        np.concatenate([np.asarray(t.tile_of_cluster) for t in tables_list])
+        if all(placed)
+        else None
+    )
     combined = RoutingTables(
         src_tag=src_tag,
         src_dest=src_dest,
@@ -300,7 +316,7 @@ def concat_tables(
         cam_syn=cam_syn,
         cluster_size=cs,
         k_tags=k_max,
-        tile_of_cluster=None,
+        tile_of_cluster=tile_of_cluster,
     )
     return combined, slabs
 

@@ -221,6 +221,31 @@ def _accumulate_into(
     )
 
 
+def _scatter_count(
+    mask: jax.Array,  # [..., Q, E] bool events to count
+    bins: jax.Array,  # [..., Q, E] int32 bin per event (value under ~mask ignored)
+    size: int,
+) -> jax.Array:  # [..., size] int32
+    """Per-bin event counts — the attribution-preserving form of ``mask.sum()``.
+
+    Used by the ``per_link_stats`` mode of :func:`stage1_route_events_fabric`
+    to keep drops per directed link and deliveries per cluster pair instead
+    of collapsing them to scalars. Masked-out events land in a sentinel slot
+    that is sliced off, so out-of-range bins never alias a real counter.
+    """
+    flat = jnp.where(mask, jnp.clip(bins, 0, size - 1), size)
+    counts = mask.astype(jnp.int32)
+    batch_shape = mask.shape[:-2]
+    if not batch_shape:
+        out = jnp.zeros((size + 1,), jnp.int32)
+        out = out.at[flat.reshape(-1)].add(counts.reshape(-1), mode="drop")
+        return out[:size]
+    b = math.prod(batch_shape)
+    m = mask.shape[-2] * mask.shape[-1]
+    out = _accumulate_activity(flat.reshape(b, m), counts.reshape(b, m), size)
+    return out.reshape(*batch_shape, size)
+
+
 def stage1_route(
     spikes: jax.Array,  # [..., N] float event weights (0/1 spikes or rates)
     src_tag: jax.Array,  # [N, E] int32, -1 = empty
@@ -293,11 +318,19 @@ class FabricRouteResult:
     counts routed (kept) events. ``hops`` / ``latency_s`` / ``energy_j``
     are per-step sums over delivered events of the Table II-IV per-event
     figures (``None`` when the matrices were not supplied).
+
+    With ``per_link_stats`` (DESIGN.md §18) the two counters keep their
+    attribution instead of collapsing to scalars: ``link_dropped`` becomes
+    ``[..., n_tiles * n_tiles]`` (flat directed tile pair; fault drops of
+    intra-tile entries land on the ``src == dst`` diagonal) and
+    ``delivered`` becomes ``[..., n_clusters * n_clusters]`` (flat
+    (src_cluster, dst_cluster) pair — the observed traffic matrix). Both
+    sum over their trailing axis to exactly the scalar-mode values.
     """
 
     buffer: jax.Array  # [..., max_delay + 1, n_clusters, K]
-    link_dropped: jax.Array  # [...] int32
-    delivered: jax.Array  # [...] int32
+    link_dropped: jax.Array  # [...] int32, or [..., T*T] per-link
+    delivered: jax.Array  # [...] int32, or [..., nc*nc] per-pair
     hops: jax.Array | None = None  # [...] int32
     latency_s: jax.Array | None = None  # [...] float32
     energy_j: jax.Array | None = None  # [...] float32
@@ -328,6 +361,7 @@ def stage1_route_events_fabric(
     src_cluster_offset: int | jax.Array = 0,  # sharded: global id of local cluster 0
     cursor: jax.Array | None = None,  # time-wheel write cursor (ring addressing)
     entry_alive: jax.Array | None = None,  # [N_local, E] bool fault mask (§15)
+    per_link_stats: bool = False,  # keep drop/delivered attribution (§18)
 ) -> FabricRouteResult:
     """Event-sparse stage 1 through the R1/R2/R3 fabric.
 
@@ -354,6 +388,14 @@ def stage1_route_events_fabric(
     dense :func:`~repro.core.dispatch.advance_inflight` shift. Everything
     else — arbitration, drops, stats — is bit-identical to the roll layout.
 
+    With ``per_link_stats`` the drop and delivered counters are scattered
+    instead of summed (see :class:`FabricRouteResult`): link-FIFO drops at
+    their directed (src_tile, dst_tile) link, fault drops at the same link
+    (or the tile's self-link diagonal for intra-tile entries, so the
+    per-link sum stays exactly equal to the scalar mode), and delivered
+    events at their (src_cluster, dst_cluster) pair — the empirical traffic
+    matrix that feeds :class:`repro.core.compiler.TrafficProfile`.
+
     ``entry_alive`` is the static per-SRAM-entry fault mask of
     :func:`repro.core.faults.entry_alive_mask`: a ``False`` entry's events
     are dropped before link arbitration (they never consume a live link's
@@ -363,11 +405,11 @@ def stage1_route_events_fabric(
     """
     ev_tag, ev_dest = gather_event_entries(queue, src_tag, src_dest)  # [..., Q, E]
     valid = ev_tag >= 0
-    fault_dropped = None
+    fault_mask = None
     if entry_alive is not None:
         safe = jnp.clip(queue.src, 0, src_tag.shape[0] - 1)
         ev_alive = jnp.take(entry_alive, safe, axis=0)  # [..., Q, E]
-        fault_dropped = (valid & ~ev_alive).sum((-1, -2), dtype=jnp.int32)
+        fault_mask = valid & ~ev_alive
         valid = valid & ev_alive
     src_cl = jnp.where(
         queue.src >= 0, queue.src // cluster_size + src_cluster_offset, 0
@@ -391,10 +433,24 @@ def stage1_route_events_fabric(
         keep_cross = keep_flat.reshape(*batch_shape, *bins.shape[-2:])
 
     kept = valid & (~cross | keep_cross)
-    link_dropped = (cross & ~keep_cross).sum((-1, -2), dtype=jnp.int32)
-    if fault_dropped is not None:
-        link_dropped = link_dropped + fault_dropped
-    delivered = kept.sum((-1, -2), dtype=jnp.int32)
+    if per_link_stats:
+        link_bins = src_tile * n_tiles + dst_tile
+        link_dropped = _scatter_count(cross & ~keep_cross, link_bins, n_tiles * n_tiles)
+        if fault_mask is not None:
+            # intra-tile fault drops land on the tile's self-link diagonal so
+            # the per-link sum equals the scalar-mode count exactly
+            fault_bins = jnp.where(
+                src_tile != dst_tile, link_bins, src_tile * n_tiles + src_tile
+            )
+            link_dropped = link_dropped + _scatter_count(
+                fault_mask, fault_bins, n_tiles * n_tiles
+            )
+        delivered = _scatter_count(kept, pair, n_clusters * n_clusters)
+    else:
+        link_dropped = (cross & ~keep_cross).sum((-1, -2), dtype=jnp.int32)
+        if fault_mask is not None:
+            link_dropped = link_dropped + fault_mask.sum((-1, -2), dtype=jnp.int32)
+        delivered = kept.sum((-1, -2), dtype=jnp.int32)
 
     delay = jnp.take(delay_steps.reshape(-1), pair, mode="clip")
     slot = delay if cursor is None else (cursor + delay) % (max_delay + 1)

@@ -44,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dispatch import DeliveryStats
-from repro.core.two_stage import _accumulate_into, stage2_cam_match
+from repro.core.two_stage import _accumulate_into, _scatter_count, stage2_cam_match
 from repro.kernels.fabric_deliver.fabric_deliver import fabric_deliver_ring_pallas
 
 __all__ = [
@@ -72,6 +72,11 @@ class FabricEntries:
     delay: jax.Array  # [M] int32 arrival delay in steps
     cross: jax.Array  # [M] bool inter-tile (link-arbitrated)
     link_start: jax.Array  # [M] int32 index of this entry's link-group start
+    # flat directed tile pair src_tile * n_tiles + dst_tile for per-link
+    # stats attribution (DESIGN.md §18); intra-tile entries carry the tile's
+    # self-link diagonal. NOT the sort key — ordering still groups intra
+    # entries first (see _entries_from_raw), so carries stay bit-identical.
+    link: jax.Array  # [M] int32
     hops: jax.Array  # [M] int32 mesh hops (Table IV)
     latency_s: jax.Array  # [M] float32 per-event latency (Table II)
     energy_j: jax.Array  # [M] float32 per-event energy (Table III/IV)
@@ -85,7 +90,7 @@ class FabricEntries:
 jax.tree_util.register_dataclass(
     FabricEntries,
     data_fields=[
-        "src", "dstk", "delay", "cross", "link_start", "hops",
+        "src", "dstk", "delay", "cross", "link_start", "link", "hops",
         "latency_s", "energy_j", "valid", "alive",
     ],
     meta_fields=[],
@@ -135,6 +140,7 @@ def _pad_entries() -> FabricEntries:
     return FabricEntries(
         src=jnp.asarray(z), dstk=jnp.asarray(z), delay=jnp.asarray(z),
         cross=jnp.asarray(np.zeros(1, bool)), link_start=jnp.asarray(z),
+        link=jnp.asarray(z),
         hops=jnp.asarray(z), latency_s=jnp.zeros(1, jnp.float32),
         energy_j=jnp.zeros(1, jnp.float32),
         valid=jnp.asarray(np.zeros(1, bool)),
@@ -158,11 +164,16 @@ def _entries_from_raw(
     d_tile = tiles[dst]
     cross = s_tile != d_tile
     link = np.where(cross, s_tile * model.n_tiles + d_tile, -1)
+    # stats attribution column: intra-tile entries map to the tile's
+    # self-link diagonal (the sort key keeps -1 so ordering is unchanged)
+    stat_link = np.where(cross, s_tile * model.n_tiles + d_tile,
+                         s_tile * model.n_tiles + s_tile)
     # arbitration order: link groups, each scanned (src asc, entry asc) —
     # identical to dispatch_slots' stable argsort of queue-major event order
     order = np.lexsort((e_ids, src_ids, link))
     src_s, dst_s, tag_s = src_ids[order], dst[order], tag[order]
     cl_s, link_s, cross_s = src_cl[order], link[order], cross[order]
+    stat_link_s = stat_link[order]
     alive_s = np.ones(src_s.size, bool) if alive is None else alive[order]
     m = src_s.size
     is_start = np.ones(m, bool)
@@ -174,6 +185,7 @@ def _entries_from_raw(
         delay=jnp.asarray(np.asarray(model.delay_steps)[cl_s, dst_s].astype(np.int32)),
         cross=jnp.asarray(cross_s),
         link_start=jnp.asarray(link_start.astype(np.int32)),
+        link=jnp.asarray(stat_link_s.astype(np.int32)),
         hops=jnp.asarray(np.asarray(model.mesh_hops)[cl_s, dst_s].astype(np.int32)),
         latency_s=jnp.asarray(
             np.asarray(model.latency_s)[cl_s, dst_s].astype(np.float32)
@@ -244,6 +256,13 @@ def build_fabric_entries_slabs(
     )
 
 
+def _count_bins(mask, bins, size):
+    """Per-bin counts of a ``[..., M]`` entry mask at static ``[M]`` bins."""
+    return _scatter_count(
+        mask[..., None], jnp.broadcast_to(bins[:, None], mask.shape + (1,)), size
+    )
+
+
 def _ring_update_jnp(
     ring, flat, w, cursor, external_activity, cam_tag, cam_syn, cluster_size,
     k_tags, d1, syn_onehot,
@@ -281,6 +300,8 @@ def fabric_deliver_ring(
     syn_onehot: jax.Array | None = None,
     block_c: int = 16,
     interpret: bool | None = None,
+    per_link_stats: bool = False,
+    n_tiles: int | None = None,  # required when per_link_stats
 ) -> tuple[jax.Array, jax.Array, jax.Array, DeliveryStats]:
     """One time-wheel fabric step: ``(drive, ring, cursor, DeliveryStats)``.
 
@@ -288,6 +309,13 @@ def fabric_deliver_ring(
     roll-based ``compact_events`` + ``stage1_route_events_fabric`` +
     ``advance_inflight`` pipeline (the ring property suite locks this);
     float latency/energy sums agree to reduction-order tolerance.
+
+    ``per_link_stats`` widens ``link_dropped`` to per directed tile pair
+    (``[..., n_tiles**2]``, fault drops of intra-tile entries on the
+    diagonal) and ``delivered`` to per (src, dst) cluster pair
+    (``[..., n_clusters**2]``) — same convention as the roll path, summing
+    to exactly the scalar counters. The delivery itself (and hence the ring
+    carry) is untouched: stats live outside the kernel.
     """
     n = spikes.shape[-1]
     n_clusters = n // cluster_size
@@ -312,28 +340,38 @@ def fabric_deliver_ring(
     # link drops (a dead link is a zero-capacity link) — and never contend
     # for a live link's FIFO slots
     act_e = act_all & entries.alive
-    fault_dropped = (act_all & ~entries.alive).sum(-1, dtype=jnp.int32)
+    fault_mask = act_all & ~entries.alive
 
     # per-directed-link FIFO arbitration without a sort: entries are already
     # in the arbiter's scan order, so an active cross-tile entry's FIFO
     # position is the count of active cross-tile entries since its link start
     if link_capacity is None:
         kept = act_e
-        link_dropped = fault_dropped
+        drop_mask = fault_mask
     else:
         cnt = (act_e & entries.cross).astype(jnp.int32)
         excl = jnp.cumsum(cnt, axis=-1) - cnt
         pos_in_link = excl - jnp.take(excl, entries.link_start, axis=-1)
         keep_cross = pos_in_link < link_capacity
         kept = act_e & (~entries.cross | keep_cross)
-        link_dropped = fault_dropped + (
-            act_e & entries.cross & ~keep_cross
-        ).sum(-1, dtype=jnp.int32)
+        # disjoint masks (alive vs severed), so the union's per-bin counts
+        # sum to exactly the scalar fault + overflow totals
+        drop_mask = fault_mask | (act_e & entries.cross & ~keep_cross)
+
+    if per_link_stats:
+        if n_tiles is None:
+            raise ValueError("per_link_stats=True requires n_tiles")
+        link_dropped = _count_bins(drop_mask, entries.link, n_tiles * n_tiles)
+        pair = (entries.src // cluster_size) * n_clusters + entries.dstk // k_tags
+        delivered = _count_bins(kept, pair, n_clusters * n_clusters)
+    else:
+        link_dropped = drop_mask.sum(-1, dtype=jnp.int32)
+        delivered = kept.sum(-1, dtype=jnp.int32)
 
     stats = DeliveryStats(
         dropped=dropped,
         link_dropped=link_dropped,
-        delivered=kept.sum(-1, dtype=jnp.int32),
+        delivered=delivered,
         hops=jnp.where(kept, entries.hops, 0).sum(-1, dtype=jnp.int32),
         latency_s=jnp.where(kept, entries.latency_s, 0.0).sum(-1, dtype=jnp.float32),
         energy_j=jnp.where(kept, entries.energy_j, 0.0).sum(-1, dtype=jnp.float32),

@@ -134,6 +134,8 @@ def build_poker_engine(
     donate_carry: bool = True,
     faults=None,
     entry_slabs=None,
+    fabric_options: dict | None = None,
+    autotune: dict | None = None,
 ) -> EventEngine:
     """Event engine at the §V serving operating point for a dispatch backend.
 
@@ -157,7 +159,11 @@ def build_poker_engine(
     if backend == "fabric":
         from repro.core.routing import Fabric
 
-        opts = {} if faults is None else {"faults": faults}
+        opts = dict(fabric_options or {})
+        if faults is not None:
+            opts["faults"] = faults
+        if autotune is not None:
+            raise ValueError("autotune applies to backend='auto', not fabric")
         return EventEngine(
             tables, params, queue_capacity=q_cap, fabric=Fabric(),
             donate_carry=donate_carry, fabric_options=opts,
@@ -169,9 +175,13 @@ def build_poker_engine(
         )
     if entry_slabs is not None:
         raise ValueError("entry_slabs only applies to the fabric backend")
+    if fabric_options is not None:
+        raise ValueError(
+            f"fabric_options need the fabric backend, got {backend!r}"
+        )
     return EventEngine(
         tables, params, backend=backend, queue_capacity=q_cap,
-        donate_carry=donate_carry,
+        donate_carry=donate_carry, autotune=autotune,
     )
 
 
@@ -280,6 +290,22 @@ class AerSessionPool:
         self._zero_act = np.zeros(
             (engine.n_clusters, engine.k_tags), dtype=np.float32
         )
+        # observed-traffic feedback (DESIGN.md §18): a fabric engine built
+        # with per_link_stats feeds every step's per-pair delivered counts
+        # and per-link drops into a TrafficProfile — the empirical traffic
+        # matrix live re-placement recompiles against
+        self.profile = self._fresh_profile(engine)
+
+    @staticmethod
+    def _fresh_profile(engine: EventEngine):
+        fb = engine.fabric_backend
+        if fb is None or not getattr(fb, "per_link_stats", False):
+            return None
+        from repro.core.compiler import TrafficProfile
+
+        return TrafficProfile.empty(
+            engine.n_clusters, engine.fabric_model.n_tiles
+        )
 
     # -- multi-model residency (DESIGN.md §16) -----------------------------
     @staticmethod
@@ -316,6 +342,8 @@ class AerSessionPool:
         backend: str = "reference",
         donate_carry: bool = True,
         faults=None,
+        fabric_options: dict | None = None,
+        autotune: dict | None = None,
     ) -> "AerSessionPool":
         """Pool with N resident models sharing one engine, hot-swap enabled.
 
@@ -324,6 +352,11 @@ class AerSessionPool:
         different models is one jitted step, no recompile. Pools built this
         way own their engine recipe and support :meth:`load_model` /
         :meth:`unload_model` on a live pool.
+
+        ``fabric_options`` configures the fabric backend (e.g.
+        ``{"per_link_stats": True, "link_capacity": k}`` for the observed-
+        traffic feedback loop of DESIGN.md §18); ``autotune`` configures
+        ``backend="auto"`` (see :class:`repro.core.event_engine.EventEngine`).
         """
         if not models:
             raise ValueError("from_models needs at least one resident model")
@@ -331,6 +364,8 @@ class AerSessionPool:
             "backend": backend,
             "donate_carry": donate_carry,
             "faults": faults,
+            "fabric_options": fabric_options,
+            "autotune": autotune,
         }
         engine = cls._engine_for(models, engine_kw)
         first = next(iter(models.values()))
@@ -350,6 +385,11 @@ class AerSessionPool:
         h = hashlib.sha256()
         h.update(self.registry.fingerprint().encode())
         h.update(f"|{mode}|P{self.cfg.pool_size}".encode())
+        decision = getattr(self.engine, "autotune_decision", None)
+        if decision is not None:
+            # the autotuned dispatch choice is part of the serving geometry:
+            # a restore onto a differently-tuned engine is a real mismatch
+            h.update(f"|{decision.token()}".encode())
         return h.hexdigest()
 
     def _resolve_model(self, session: DvsSession) -> str:
@@ -447,6 +487,9 @@ class AerSessionPool:
         self._zero_act = np.zeros(
             (new_engine.n_clusters, new_engine.k_tags), dtype=np.float32
         )
+        # measurements made under the old geometry/placement don't describe
+        # the new one — restart the observation window
+        self.profile = self._fresh_profile(new_engine)
 
     def clone_onto(
         self, new_engine: EventEngine, cfg: AerServeConfig | None = None
@@ -704,12 +747,18 @@ class AerSessionPool:
         self.last_stats = stats  # watchdog raw material (serve/health.py)
         self.n_steps += 1
 
+        if self.profile is not None and stats is not None:
+            self.profile.observe(stats)
         dropped = None if stats is None else np.asarray(stats.dropped)
         link_dropped = (
             None
             if stats is None or stats.link_dropped is None
             else np.asarray(stats.link_dropped)
         )
+        if link_dropped is not None and link_dropped.ndim > 1:
+            # per_link_stats mode: collapse the [P, T*T] attribution axis for
+            # the per-session counters (the profile keeps the full matrix)
+            link_dropped = link_dropped.sum(-1)
         for i, sess in enumerate(self.slots):
             if sess is None:
                 continue

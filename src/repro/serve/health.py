@@ -41,6 +41,8 @@ __all__ = [
     "FleetWatchdog",
     "serve_resilient",
     "migrate_pool",
+    "ReplacementConfig",
+    "ReplacementController",
 ]
 
 
@@ -363,3 +365,270 @@ def migrate_pool(
     :meth:`AerSessionPool.clone_onto` (DESIGN.md §16).
     """
     return pool.clone_onto(new_engine, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Profile-guided live re-placement (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplacementConfig:
+    """Thresholds and hysteresis for profile-guided re-placement.
+
+    ``drift_threshold`` is a total-variation distance between the observed
+    (cluster, cluster) traffic matrix and the compile-time assumption, in
+    ``[0, 1]`` — 0.25 means a quarter of the probability mass moved to
+    different source->destination pairs than the placement was optimized
+    for. ``min_steps`` gates how much observation must accumulate before a
+    judgement (a two-step window is all noise); ``cooldown_steps`` spaces
+    consecutive recompiles so a workload oscillating around the threshold
+    cannot thrash the placement (the observation window also restarts at
+    every swap, so the cooldown compounds with ``min_steps``).
+    """
+
+    drift_threshold: float = 0.25  # TV distance observed vs assumed -> swap
+    min_steps: int = 16  # observed pool steps before drift is judged
+    cooldown_steps: int = 32  # pool steps between consecutive swaps
+    anneal_steps: int | None = None  # optimize_placement budget (None = auto)
+    seed: int = 0  # annealer seed (swap is deterministic given the profile)
+
+
+class ReplacementController:
+    """Closes the loop: observed traffic -> new placement -> live swap.
+
+    Watches a pool's :class:`~repro.core.compiler.TrafficProfile` (the pool
+    must be built with ``fabric_options={"per_link_stats": True}``) and,
+    when the observed (cluster, cluster) delivery matrix drifts past
+    ``drift_threshold`` from the uniform compile-time assumption, re-runs
+    ``optimize_placement`` on the *measured* matrix and swaps the
+    recompiled tables under the live sessions.
+
+    The swap is the **bit-exact rung** of the §15/§16 ladder: the new
+    placement is registered as a fresh model *version* (``name@r1``,
+    ``name@r2``, ...) via :meth:`AerSessionPool.load_model`, constrained to
+    tiles no resident model occupies. Mid-flight tenants keep serving on
+    the old version — arbitration is per batch slot and a slot's spikes
+    live entirely in its model's slab, so adding the new version's entries
+    perturbs no in-flight numerics (the multi-model byte-equality tests of
+    §16 are exactly this property). New admissions route to
+    :attr:`current`; once the old version drains, :meth:`drain_retired`
+    unloads it and frees its tiles. When no spare tiles exist the bit-exact
+    rung is infeasible and the controller raises — the caller can fall back
+    to :func:`migrate_pool` onto a re-placed engine (best-effort rung,
+    bit-exact only when geometry and ``max_delay`` agree).
+    """
+
+    def __init__(
+        self,
+        pool: AerSessionPool,
+        model: str | None = None,
+        cfg: ReplacementConfig | None = None,
+    ):
+        self.pool = pool
+        self.cfg = cfg or ReplacementConfig()
+        if pool.profile is None:
+            raise ValueError(
+                "pool has no traffic profile — build the engine with "
+                'fabric_options={"per_link_stats": True}'
+            )
+        if model is None:
+            if len(pool.models) != 1:
+                raise ValueError(
+                    f"multi-model pool: pass model= explicitly "
+                    f"(have {list(pool.models)})"
+                )
+            model = next(iter(pool.models))
+        elif model not in pool.models:
+            raise ValueError(
+                f"model {model!r} is not resident (have {list(pool.models)})"
+            )
+        self.base = model  # versions are named f"{base}@r{n}"
+        self.current = model  # where new admissions should go
+        self.version = 0
+        self.retired: list[str] = []  # old versions awaiting drain
+        self.history: list[dict] = []  # one record per swap
+        self._last_swap_step = -(10**9)
+        self._stamp_effective_placements()
+
+    # -- placement bookkeeping -------------------------------------------
+
+    def _fabric(self):
+        return self.pool.engine.fabric_backend.fabric
+
+    def _stamp_effective_placements(self) -> None:
+        """Back-fill explicit ``tile_of_cluster`` on every resident model.
+
+        ``concat_tables`` composes placements all-or-none, so the versioned
+        swap needs every resident stamped. A model compiled without one is
+        effectively on its slice of the combined engine's default
+        hierarchical-linear placement — stamping that exact slice changes
+        no routing (the recompiled combined placement is identical), it
+        only makes the implicit explicit so a re-placed version can join.
+        """
+        from repro.core.routing import default_tile_of_cluster
+
+        if all(
+            m.tables.tile_of_cluster is not None
+            for m in self.pool.models.values()
+        ):
+            return
+        engine = self.pool.engine
+        backend_tiles = engine.fabric_backend.tile_of_cluster
+        if backend_tiles is None:
+            backend_tiles = default_tile_of_cluster(
+                engine.n_clusters, self._fabric()
+            )
+        backend_tiles = np.asarray(backend_tiles)
+        for name, cc in self.pool.models.items():
+            if cc.tables.tile_of_cluster is not None:
+                continue
+            slab = self.pool.slabs[name]
+            tiles = backend_tiles[slab.cluster_lo : slab.cluster_hi].copy()
+            self.pool.models[name] = dataclasses.replace(
+                cc,
+                tables=dataclasses.replace(cc.tables, tile_of_cluster=tiles),
+            )
+
+    def _occupied_tiles(self) -> np.ndarray:
+        """Per-tile core occupancy over every resident model."""
+        fabric = self._fabric()
+        count = np.zeros(fabric.n_tiles, dtype=np.int64)
+        for cc in self.pool.models.values():
+            toc = cc.tables.tile_of_cluster
+            if toc is not None:
+                count += np.bincount(
+                    np.asarray(toc), minlength=fabric.n_tiles
+                )
+        return count
+
+    # -- observation ------------------------------------------------------
+
+    def observed_matrix(self) -> np.ndarray:
+        """Measured per-step (src, dst) cluster matrix for :attr:`current`,
+        sliced to the model's slab of the combined profile."""
+        prof = self.pool.profile
+        slab = self.pool.slabs[self.current]
+        m = prof.matrix()
+        return m[
+            slab.cluster_lo : slab.cluster_hi,
+            slab.cluster_lo : slab.cluster_hi,
+        ]
+
+    def drift(self) -> float:
+        """TV distance of the observed slab matrix from the compile-time
+        uniform assumption, in ``[0, 1]`` (0.0 until traffic is observed)."""
+        from repro.core.compiler import traffic_matrix
+
+        prof = self.pool.profile
+        if prof is None or prof.steps == 0:
+            return 0.0
+        obs = self.observed_matrix()
+        so = float(obs.sum())
+        if so <= 0.0:
+            return 0.0
+        assumed = traffic_matrix(self.pool.models[self.current].tables)
+        sa = float(assumed.sum())
+        if sa <= 0.0:
+            return 0.0
+        return 0.5 * float(np.abs(obs / so - assumed / sa).sum())
+
+    # -- the swap ---------------------------------------------------------
+
+    def maybe_replace(self, force: bool = False) -> dict | None:
+        """Judge drift and, past threshold, perform the versioned swap.
+
+        Returns a report dict (also appended to :attr:`history`) when a
+        swap happened, else ``None``. ``force=True`` skips the drift and
+        cooldown gates but still requires an observed matrix to optimize
+        on — a watchdog ``pool-degraded`` event is the typical forcer.
+        """
+        from repro.core.compiler import optimize_placement, placement_cost
+        from repro.core.routing import tile_hop_matrix
+
+        cfg = self.cfg
+        prof = self.pool.profile
+        pool = self.pool
+        if prof is None or prof.steps == 0:
+            return None
+        if not force:
+            if prof.steps < cfg.min_steps:
+                return None
+            if pool.n_steps - self._last_swap_step < cfg.cooldown_steps:
+                return None
+        drift = self.drift()
+        if not force and drift < cfg.drift_threshold:
+            return None
+        obs = self.observed_matrix()
+        if float(obs.sum()) <= 0.0:
+            return None
+
+        fabric = self._fabric()
+        cc = pool.models[self.current]
+        nc = obs.shape[0]
+        occupied = self._occupied_tiles()
+        free = np.flatnonzero(occupied == 0)
+        if free.size * fabric.cores_per_tile < nc:
+            raise RuntimeError(
+                f"bit-exact re-placement needs {nc} free cores on unoccupied "
+                f"tiles but only {free.size} tiles "
+                f"({free.size * fabric.cores_per_tile} cores) are free — "
+                "drain retired versions first, or fall back to migrate_pool "
+                "(best-effort rung)"
+            )
+        # seed: pack the free tiles in order, cores_per_tile clusters each
+        init = free[np.arange(nc) // fabric.cores_per_tile]
+        allowed = np.zeros(fabric.n_tiles, dtype=bool)
+        allowed[free] = True
+        placement, info = optimize_placement(
+            obs,
+            fabric,
+            init=init,
+            seed=cfg.seed,
+            anneal_steps=cfg.anneal_steps,
+            allowed_tiles=allowed,
+        )
+        # what the swap buys, measured on the same observed matrix
+        h = tile_hop_matrix(fabric).astype(np.float64)
+        old_toc = np.asarray(cc.tables.tile_of_cluster)
+        cost_old = placement_cost(obs, h, old_toc)
+
+        new_name = f"{self.base}@r{self.version + 1}"
+        cc_new = dataclasses.replace(
+            cc,
+            tables=dataclasses.replace(cc.tables, tile_of_cluster=placement),
+        )
+        pool.load_model(new_name, cc_new)  # resets the observation window
+        self.retired.append(self.current)
+        self.current = new_name
+        self.version += 1
+        self._last_swap_step = pool.n_steps
+        report = {
+            "name": new_name,
+            "step": pool.n_steps,
+            "drift": drift,
+            "placement": np.asarray(placement),
+            "cost_observed_old": float(cost_old),
+            "cost_observed_new": float(info["cost_final"]),
+            "mean_hops_old": float(cost_old / obs.sum()),
+            "mean_hops_new": float(info["mean_hops_final"]),
+        }
+        self.history.append(report)
+        return report
+
+    def retarget(self, sess: DvsSession) -> DvsSession:
+        """Point a not-yet-admitted session at the newest version."""
+        sess.model = self.current
+        return sess
+
+    def drain_retired(self) -> list[str]:
+        """Unload retired versions with no live sessions; returns names."""
+        pool = self.pool
+        unloaded = []
+        for name in list(self.retired):
+            if any(s is not None and s.model == name for s in pool.slots):
+                continue
+            pool.unload_model(name)
+            self.retired.remove(name)
+            unloaded.append(name)
+        return unloaded

@@ -102,6 +102,10 @@ class ShardConfig:
     cluster_devices: int = 1
     batch_devices: int = 1
     backend: str = "reference"  # dispatch backend name, or "fabric"
+    # fabric mode only: per-link drop / per-pair delivery attribution — the
+    # shards' pools then grow TrafficProfiles and the fleet's admission
+    # scoring upgrades to measured rates (DESIGN.md §18)
+    per_link_stats: bool = False
 
 
 def retile_for_slabs(cc: CompiledCnn, n_slabs: int, fabric=None, seed: int = 0):
@@ -128,6 +132,7 @@ def build_poker_shard_engine(
     devices=None,
     donate_carry: bool = True,
     entry_slabs=None,
+    per_link_stats: bool = False,
 ) -> ShardedEventEngine:
     """One serving shard's engine at the §V poker operating point.
 
@@ -152,11 +157,21 @@ def build_poker_shard_engine(
     if backend == "fabric":
         from repro.core.routing import Fabric
 
+        fabric_options = (
+            {"per_link_stats": True} if per_link_stats else None
+        )
         return ShardedEventEngine(
-            tables, params, fabric=Fabric(), entry_slabs=entry_slabs, **mesh_kw
+            tables,
+            params,
+            fabric=Fabric(),
+            entry_slabs=entry_slabs,
+            fabric_options=fabric_options,
+            **mesh_kw,
         )
     if entry_slabs is not None:
         raise ValueError("entry_slabs only applies to the fabric backend")
+    if per_link_stats:
+        raise ValueError("per_link_stats only applies to the fabric backend")
     return ShardedEventEngine(tables, params, backend=backend, **mesh_kw)
 
 
@@ -236,6 +251,7 @@ class ShardedSessionPool:
                     batch_devices=shards.batch_devices,
                     devices=self._shard_devices[i],
                     entry_slabs=entry_slabs,
+                    per_link_stats=shards.per_link_stats,
                 )
             pool = AerSessionPool(cc, engine, cfg, models=self.models)
             if isinstance(engine, ShardedEventEngine):
@@ -251,6 +267,13 @@ class ShardedSessionPool:
         self._rates = {
             name: session_rate(m.tables) for name, m in self.models.items()
         }
+        # observed per-model rates (§18): shards built with per-link stats
+        # feed their traffic profiles back here; once a model has enough
+        # observed session-steps the measured delivered/session-step rate
+        # replaces the static compiler prediction in admission scoring
+        self.observed_min_session_steps = 8
+        self._obs_delivered: dict[str, float] = {n: 0.0 for n in self.models}
+        self._obs_session_steps: dict[str, int] = {n: 0 for n in self.models}
 
     def _assign_devices(self, devices) -> list[list]:
         per = self.shards.cluster_devices * self.shards.batch_devices
@@ -313,6 +336,16 @@ class ShardedSessionPool:
         )
 
     def _rate_of(self, sess: DvsSession) -> float:
+        """Admission cost of one session: observed rate when measured,
+        else the static compiler prediction.
+
+        The observed rate (delivered events per session-step, from the
+        shards' traffic profiles) and the static :func:`session_rate`
+        (expected events under uniform firing) are different units — both
+        only ever rank sessions against each other inside one admission
+        decision, and the ``observed_min_session_steps`` floor keeps the
+        mixed-unit transition window short.
+        """
         name = sess.model
         if name is None:
             if len(self.models) != 1:
@@ -325,7 +358,50 @@ class ShardedSessionPool:
             raise KeyError(
                 f"model {name!r} is not resident (have {list(self.models)})"
             )
+        n = self._obs_session_steps.get(name, 0)
+        if n >= self.observed_min_session_steps:
+            return self._obs_delivered[name] / n
         return self._rates[name]
+
+    def observed_rates(self) -> dict[str, float | None]:
+        """Measured per-model delivered/session-step rates (``None`` below
+        the ``observed_min_session_steps`` floor or without per-link stats)."""
+        out: dict[str, float | None] = {}
+        for name in self.models:
+            n = self._obs_session_steps.get(name, 0)
+            out[name] = (
+                self._obs_delivered[name] / n
+                if n >= self.observed_min_session_steps
+                else None
+            )
+        return out
+
+    def _observe_rates(self, live: list[int]) -> None:
+        """Fold the shards' last-step traffic profiles into the per-model
+        observed-rate accumulators (slab-sliced: slabs are disjoint and
+        arbitration is per batch slot, so a slab's delivered counts belong
+        entirely to its model's sessions)."""
+        for i in live:
+            pool = self.pools[i]
+            prof = getattr(pool, "profile", None)
+            if prof is None or prof.last is None:
+                continue
+            by_model: dict[str, int] = {}
+            for s in pool.slots:
+                if s is not None and s.model is not None:
+                    by_model[s.model] = by_model.get(s.model, 0) + 1
+            for name, count in by_model.items():
+                slab = pool.slabs[name]
+                sub = prof.last[
+                    slab.cluster_lo : slab.cluster_hi,
+                    slab.cluster_lo : slab.cluster_hi,
+                ]
+                self._obs_delivered[name] = (
+                    self._obs_delivered.get(name, 0.0) + float(sub.sum())
+                )
+                self._obs_session_steps[name] = (
+                    self._obs_session_steps.get(name, 0) + count
+                )
 
     def _score(self, i: int) -> float:
         """Predicted traffic load of shard ``i``: summed per-session rates of
@@ -393,6 +469,7 @@ class ShardedSessionPool:
         outs = [self.pools[i].begin_step() for i in live]
         for i, out in zip(live, outs):
             self.pools[i].finish_step(out)
+        self._observe_rates(live)
         self.n_steps += 1
 
     def evict_finished(self) -> list[SessionResult]:

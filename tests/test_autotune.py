@@ -1,0 +1,216 @@
+"""Dispatch autotuner (DESIGN.md §18).
+
+``backend="auto"`` measures the dense/queued/fused crossover at the
+engine's (activity, batch) operating point and builds the winner. The
+load-bearing claims:
+
+  * injected measurements make the decision a pure function — same inputs,
+    same :class:`AutotuneDecision`, no timers involved;
+  * ties break in candidate order (a stable decision under equal timings);
+  * the decision actually changes the built step: a ``dense`` winner
+    bypasses AER queue compaction (zero reported drops), a ``queued``
+    winner is bit-identical to an explicit ``backend="reference"`` engine
+    under the same queue capacity;
+  * the decision is part of the serving identity: pools tuned to different
+    winners have different fingerprints (checkpoint restore refuses a
+    differently-tuned engine);
+  * misuse is a typed error, not silent fallback.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cnn import compile_poker_cnn
+from repro.core.dispatch import (
+    AutotuneDecision,
+    autotune_backend,
+    autotune_candidates,
+)
+from repro.core.event_engine import EventEngine
+from repro.core.tags import NetworkSpec, compile_network
+from repro.serve.aer import AerServeConfig, AerSessionPool
+
+
+@functools.lru_cache(maxsize=1)
+def _tables():
+    rng = np.random.default_rng(0)
+    n = 64
+    spec = NetworkSpec(n_neurons=n, cluster_size=8, k_tags=64)
+    for _ in range(150):
+        spec.connect(int(rng.integers(n)), int(rng.integers(n)),
+                     int(rng.integers(4)))
+    return compile_network(spec)
+
+
+def _decide(measure, **kw):
+    t = _tables()
+    return autotune_backend(
+        t.src_tag, t.src_dest, t.cam_tag, t.cam_syn,
+        t.cluster_size, t.k_tags, measure=measure, **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# decision mechanics
+# ---------------------------------------------------------------------------
+def test_fully_injected_decision_is_deterministic():
+    measure = {"dense": 3.0, "queued": 1.5, "fused": 2.0}
+    a = _decide(measure, activity=0.25, batch=4)
+    b = _decide(measure, activity=0.25, batch=4)
+    assert a == b  # no timing ran: the decision is a pure function
+    assert a.winner == "queued" and a.backend == "reference" and not a.dense
+    assert a.measurements == (("dense", 3.0), ("queued", 1.5), ("fused", 2.0))
+    assert a.token() == "autotune:queued:act0.25:B4"
+
+
+def test_tie_breaks_in_candidate_order():
+    flat = {"dense": 1.0, "queued": 1.0, "fused": 1.0}
+    assert _decide(flat).winner == "dense"
+    swapped = _decide(flat, candidates=("fused", "queued", "dense"))
+    assert swapped.winner == "fused"
+
+
+def test_noise_band_resolves_dead_heats_to_the_earlier_candidate():
+    """A dead heat (queued under a lossless queue degenerates to dense)
+    times within jitter of the fastest; the tol band must resolve it to
+    the earlier candidate instead of flipping on the argmin."""
+    near = {"dense": 1.04, "queued": 1.0, "fused": 3.0}
+    assert _decide(near).winner == "dense"  # within the default 5% band
+    assert _decide(near, tol=0.0).winner == "queued"  # strict argmin
+    clear = {"dense": 2.0, "queued": 1.0, "fused": 3.0}
+    assert _decide(clear).winner == "queued"  # real wins are untouched
+
+
+def test_lossless_queue_aliases_queued_to_dense_structurally():
+    """Under a lossless queue the queued path IS dense (the §10 shortcut):
+    the tuner must record dense's timing for it instead of racing two
+    timings of the same program, so queued can never win the dead heat no
+    matter what the clock does."""
+    for cap in (None, _tables().n_neurons):
+        d = _decide({"fused": 9e9}, queue_capacity=cap)
+        m = dict(d.measurements)
+        assert m["queued"] == m["dense"]  # one timing, copied — not re-raced
+        assert d.winner == "dense"
+    # a genuinely compacting capacity still times queued independently
+    d = _decide({"fused": 9e9}, queue_capacity=4, activity=1.0)
+    m = dict(d.measurements)
+    assert m["queued"] != m["dense"]
+
+
+def test_dense_winner_bypasses_compaction():
+    d = _decide({"dense": 1.0, "queued": 2.0, "fused": 3.0})
+    assert d.winner == "dense" and d.backend == "reference" and d.dense
+
+
+def test_fabric_ring_requires_injected_measurement():
+    with pytest.raises(ValueError, match="injected"):
+        _decide(None, candidates=("fabric_ring",))
+    d = _decide({"fabric_ring": 0.5, "dense": 9.0},
+                candidates=("dense", "fabric_ring"))
+    assert d.winner == "fabric_ring" and d.backend == "fabric"
+    assert "fabric_ring" in autotune_candidates()
+
+
+def test_unknown_candidate_rejected():
+    with pytest.raises(ValueError, match="unknown autotune candidate"):
+        _decide(None, candidates=("dense", "sparse"))
+
+
+# ---------------------------------------------------------------------------
+# the decision is honored by the built engine
+# ---------------------------------------------------------------------------
+def _run(engine, steps=4, batch=2, seed=1):
+    """Kick every neuron at step 0 only: later dynamics are driven purely by
+    delivered events, so dropped events must show up in the final state."""
+    t = _tables()
+    rng = np.random.default_rng(seed)
+    ev = jnp.asarray(
+        rng.random((steps, batch, t.n_clusters, t.k_tags)) < 0.2, jnp.float32
+    ) * 4.0
+    i_ext = jnp.zeros((steps, batch, t.n_neurons)).at[0].set(4e3)
+    carry, (spikes, stats) = engine.run(
+        engine.init_state(batch=batch), ev, i_ext)
+    return carry, np.asarray(spikes), jax.tree.map(np.asarray, stats)
+
+
+def test_queued_decision_bit_identical_to_reference_engine():
+    t = _tables()
+    d = _decide({"dense": 9.0, "queued": 1.0, "fused": 5.0},
+                queue_capacity=4)
+    auto = EventEngine(t, backend="auto", queue_capacity=4,
+                       autotune={"decision": d})
+    assert auto.autotune_decision == d
+    ref = EventEngine(t, backend="reference", queue_capacity=4)
+    ca, sp_a, st_a = _run(auto)
+    cr, sp_r, st_r = _run(ref)
+    np.testing.assert_array_equal(sp_a, sp_r)
+    jax.tree.map(np.testing.assert_array_equal, st_a, st_r)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        ca, cr,
+    )
+
+
+def test_dense_and_queued_decisions_build_different_steps():
+    """Under a 4-deep AER queue the dense winner sees every event (zero
+    reported drops) while the queued winner compacts and drops; the lost
+    events change delivery, so the spike rasters diverge once the first
+    post-drop step's spikes feed back (step >= 2)."""
+    t = _tables()
+    mk = lambda m: EventEngine(
+        t, backend="auto", queue_capacity=4,
+        autotune={"decision": _decide(m, queue_capacity=4)},
+    )
+    dense = mk({"dense": 1.0, "queued": 9.0, "fused": 9.0})
+    queued = mk({"dense": 9.0, "queued": 1.0, "fused": 9.0})
+    assert dense._autotune_dense and not queued._autotune_dense
+    cd, sp_d, st_d = _run(dense, steps=6)
+    cq, sp_q, st_q = _run(queued, steps=6)
+    assert int(np.asarray(st_d.dropped).sum()) == 0  # bypassed compaction
+    assert int(np.asarray(st_q.dropped).sum()) > 0  # 4-deep queue overflowed
+    # the dropped events were delivery the dense path integrated: the final
+    # membrane state must differ even if neither raster re-crosses threshold
+    assert not np.array_equal(np.asarray(cd[0].v), np.asarray(cq[0].v))
+
+
+# ---------------------------------------------------------------------------
+# serving identity + typed misuse
+# ---------------------------------------------------------------------------
+def test_pool_fingerprint_carries_the_decision():
+    cc = compile_poker_cnn()
+    cfg = AerServeConfig(pool_size=2, max_steps=12)
+
+    def pool(measure):
+        d = autotune_backend(
+            cc.tables.src_tag, cc.tables.src_dest, cc.tables.cam_tag,
+            cc.tables.cam_syn, cc.tables.cluster_size, cc.tables.k_tags,
+            measure=measure,
+        )
+        return AerSessionPool.from_models(
+            {"m": cc}, cfg, backend="auto", autotune={"decision": d})
+
+    p_dense = pool({"dense": 1.0, "queued": 2.0, "fused": 3.0})
+    p_queued = pool({"dense": 2.0, "queued": 1.0, "fused": 3.0})
+    p_dense2 = pool({"dense": 1.0, "queued": 5.0, "fused": 9.0})
+    assert p_dense.fingerprint() != p_queued.fingerprint()
+    assert p_dense.fingerprint() == p_dense2.fingerprint()  # decision, not µs
+    untuned = AerSessionPool.from_models({"m": cc}, cfg, backend="reference")
+    assert untuned.fingerprint() != p_queued.fingerprint()
+
+
+def test_autotune_misuse_is_typed():
+    t = _tables()
+    d = _decide({"dense": 1.0, "queued": 2.0, "fused": 3.0})
+    with pytest.raises(ValueError, match="backend='auto'"):
+        EventEngine(t, backend="reference", autotune={"decision": d})
+    with pytest.raises(ValueError, match="explicit backend"):
+        from repro.core.routing import Fabric
+
+        EventEngine(t, backend="auto", fabric=Fabric(grid_x=2, grid_y=1))
+    with pytest.raises(ValueError, match="exclusive"):
+        EventEngine(t, backend="auto",
+                    autotune={"decision": d, "activity": 0.5})

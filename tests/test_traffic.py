@@ -1,0 +1,257 @@
+"""Per-link traffic attribution + TrafficProfile (DESIGN.md §18).
+
+The contract under test:
+  * per-link stats mode widens ``DeliveryStats.link_dropped`` to a flat
+    ``[n_tiles * n_tiles]`` directed-link histogram and ``delivered`` to a
+    flat ``[n_clusters * n_clusters]`` (src, dst) pair histogram, while the
+    trailing-axis sums reproduce the scalar-mode counters EXACTLY — the
+    widened mode refines, never re-measures;
+  * the hand-built 2-tile overflow attributes its drop to the one directed
+    link that overflowed (the ``.sum((-1, -2))`` collapse this replaces
+    could only say "somewhere");
+  * the ring fast path and the roll reference agree bit-for-bit on the
+    widened arrays, and spikes are unchanged vs scalar mode;
+  * the sharded fabric step psum-reduces the widened arrays consistently
+    (specs shorter than rank leave the new trailing axes replicated);
+  * all sources spiking drop-free for one step reproduces the compiler's
+    ``traffic_matrix`` exactly — the observed-profile-vs-assumption
+    conformance that makes ``TrafficProfile.drift`` meaningful.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compiler import TrafficProfile, traffic_matrix
+from repro.core.dispatch import DeliveryStats, FabricBackend
+from repro.core.event_engine import EventEngine
+from repro.core.routing import ChipConstants, Fabric
+from repro.core.tags import NetworkSpec, compile_network
+
+DT = 1e-3
+
+
+def _random_net(rng, n=64, cluster=8, k=64, edges=120, fabric=None):
+    spec = NetworkSpec(n_neurons=n, cluster_size=cluster, k_tags=k,
+                       max_cam_words=32, max_sram_entries=16)
+    seen = set()
+    for _ in range(edges):
+        s, d = int(rng.integers(n)), int(rng.integers(n))
+        if (s, d) in seen:
+            continue
+        seen.add((s, d))
+        spec.connect(s, d, int(rng.integers(4)))
+    return compile_network(spec, fabric=fabric)
+
+
+# ---------------------------------------------------------------------------
+# hand-built 2-tile overflow: the drop lands on ITS link
+# ---------------------------------------------------------------------------
+def _two_tile(per_link_stats):
+    const = ChipConstants(latency_across_chip_s=3 * DT)
+    fab = Fabric(grid_x=2, grid_y=1, cores_per_tile=1, constants=const)
+    spec = NetworkSpec(n_neurons=8, cluster_size=4, k_tags=8)
+    spec.connect(0, 4)  # cross-tile (tile 0 -> 1), lowest source id -> wins
+    spec.connect(1, 5)  # cross-tile, contends for the same link -> dropped
+    spec.connect(2, 3)  # intra-tile control
+    tables = compile_network(spec, fabric=fab)
+    backend = FabricBackend(fabric=fab, tile_of_cluster=tables.tile_of_cluster,
+                            dt=DT, link_capacity=1,
+                            per_link_stats=per_link_stats)
+    return fab, tables, backend
+
+
+def test_two_tile_overflow_attributed_to_its_link():
+    fab, tables, backend = _two_tile(per_link_stats=True)
+    args = (
+        jnp.asarray(tables.src_tag), jnp.asarray(tables.src_dest),
+        jnp.asarray(tables.cam_tag), jnp.asarray(tables.cam_syn),
+        tables.cluster_size, tables.k_tags,
+    )
+    spikes = jnp.zeros((8,)).at[jnp.asarray([0, 1, 2])].set(1.0)
+    inflight = backend.init_inflight(tables.n_clusters, tables.k_tags)
+    _, _, stats = backend.deliver_fabric(spikes, *args, inflight=inflight)
+    # link bins are src_tile * n_tiles + dst_tile on the 2-tile line
+    link = np.asarray(stats.link_dropped)
+    assert link.shape == (fab.n_tiles * fab.n_tiles,)
+    np.testing.assert_array_equal(link, [0, 1, 0, 0])  # only tile0 -> tile1
+    # pair bins are src_cl * n_clusters + dst_cl; kept: 2->3 intra (0, 0)
+    # and 0->4 cross (0, 1); the dropped 1->5 is counted nowhere
+    pair = np.asarray(stats.delivered)
+    assert pair.shape == (tables.n_clusters * tables.n_clusters,)
+    np.testing.assert_array_equal(pair, [1, 1, 0, 0])
+
+
+def test_two_tile_scalar_mode_unchanged():
+    _, tables, backend = _two_tile(per_link_stats=False)
+    args = (
+        jnp.asarray(tables.src_tag), jnp.asarray(tables.src_dest),
+        jnp.asarray(tables.cam_tag), jnp.asarray(tables.cam_syn),
+        tables.cluster_size, tables.k_tags,
+    )
+    spikes = jnp.zeros((8,)).at[jnp.asarray([0, 1, 2])].set(1.0)
+    inflight = backend.init_inflight(tables.n_clusters, tables.k_tags)
+    _, _, stats = backend.deliver_fabric(spikes, *args, inflight=inflight)
+    assert np.asarray(stats.link_dropped).shape == ()
+    assert int(stats.link_dropped) == 1 and int(stats.delivered) == 2
+
+
+# ---------------------------------------------------------------------------
+# widened sums == scalar counters, ring == roll, spikes unchanged
+# ---------------------------------------------------------------------------
+def _run_engine(tables, fab, per_link_stats, ring, steps=6, batch=2):
+    eng = EventEngine(
+        tables, fabric=fab, queue_capacity=tables.n_neurons,
+        fabric_options={"dt": DT, "link_capacity": 1, "ring": ring,
+                        "per_link_stats": per_link_stats},
+    )
+    inp = jnp.zeros((batch, tables.n_clusters, tables.k_tags))
+    inp = inp.at[:, :, :4].set(3.0)
+    ev = jnp.broadcast_to(inp, (steps, *inp.shape))
+    i_ext = jnp.full((batch, tables.n_neurons), 5e3)
+    _, (spikes, stats) = eng.run(eng.init_state(batch=batch), ev, i_ext)
+    return np.asarray(spikes), jax.tree.map(np.asarray, stats)
+
+
+def test_per_link_sums_match_scalar_and_ring_matches_roll():
+    fab = Fabric(grid_x=2, grid_y=2, cores_per_tile=2)
+    tables = _random_net(np.random.default_rng(3), fabric=fab)
+    sp_scalar, st_scalar = _run_engine(tables, fab, False, ring=True)
+    sp_ring, st_ring = _run_engine(tables, fab, True, ring=True)
+    sp_roll, st_roll = _run_engine(tables, fab, True, ring=False)
+
+    t2, c2 = fab.n_tiles ** 2, tables.n_clusters ** 2
+    assert st_ring.link_dropped.shape[-1] == t2
+    assert st_ring.delivered.shape[-1] == c2
+    # refinement, not re-measurement: trailing sums == scalar mode exactly
+    np.testing.assert_array_equal(
+        st_ring.link_dropped.sum(-1), st_scalar.link_dropped)
+    np.testing.assert_array_equal(
+        st_ring.delivered.sum(-1), st_scalar.delivered)
+    assert int(st_scalar.link_dropped.sum()) > 0  # the sweep did overflow
+    # spikes are stats-mode invariant, and ring == roll on the widened stats
+    np.testing.assert_array_equal(sp_scalar, sp_ring)
+    np.testing.assert_array_equal(sp_ring, sp_roll)
+    np.testing.assert_array_equal(st_ring.link_dropped, st_roll.link_dropped)
+    np.testing.assert_array_equal(st_ring.delivered, st_roll.delivered)
+
+
+def test_sharded_step_reduces_per_link_axes():
+    """The widened stats arrays flow through the shard_map psum unchanged:
+    a single-device model mesh must reproduce the local step's per-link
+    histograms bit-for-bit (PartitionSpecs shorter than the widened rank
+    leave the trailing attribution axes replicated)."""
+    fab = Fabric(grid_x=2, grid_y=1, cores_per_tile=4)
+    tables = _random_net(np.random.default_rng(5), fabric=fab)
+    eng = EventEngine(
+        tables, fabric=fab, queue_capacity=tables.n_neurons,
+        fabric_options={"dt": DT, "link_capacity": 1,
+                        "per_link_stats": True},
+    )
+    mesh = jax.make_mesh((1,), ("model",))
+    sharded = eng.make_sharded_step(mesh, "model")
+    state, prev, ring, cur = eng.init_state()
+    prev = prev.at[jnp.arange(0, tables.n_neurons, 2)].set(1.0)
+    inp = jnp.zeros((tables.n_clusters, tables.k_tags)).at[:, 0].set(4.0)
+    i_ext = jnp.zeros((tables.n_neurons,))
+    for _ in range(5):
+        (st_l, sp_l, ring_l, cur_l), (_, stats_l) = eng.step(
+            (state, prev, ring, cur), inp)
+        st_s, sp_s, ring_s, cur_s, stats_s = sharded(
+            eng.tables, state, prev, ring, cur, inp, i_ext)
+        np.testing.assert_array_equal(np.asarray(sp_l), np.asarray(sp_s))
+        np.testing.assert_array_equal(
+            np.asarray(stats_l.link_dropped), np.asarray(stats_s.link_dropped))
+        np.testing.assert_array_equal(
+            np.asarray(stats_l.delivered), np.asarray(stats_s.delivered))
+        state, prev, ring, cur = st_l, sp_l, ring_l, cur_l
+
+
+# ---------------------------------------------------------------------------
+# observed-profile conformance with the compiler's traffic model
+# ---------------------------------------------------------------------------
+def test_all_sources_spiking_reproduces_traffic_matrix():
+    """Drop-free, batch=1, every source spiking once: the observed pair
+    histogram IS the compiler's assumed traffic matrix — the conformance
+    that anchors TrafficProfile.drift at 0 for a workload matching the
+    compile-time assumption."""
+    fab = Fabric(grid_x=2, grid_y=2, cores_per_tile=2)
+    tables = _random_net(np.random.default_rng(7), fabric=fab)
+    backend = FabricBackend(fabric=fab, tile_of_cluster=tables.tile_of_cluster,
+                            dt=DT, per_link_stats=True)  # no link capacity
+    args = (
+        jnp.asarray(tables.src_tag), jnp.asarray(tables.src_dest),
+        jnp.asarray(tables.cam_tag), jnp.asarray(tables.cam_syn),
+        tables.cluster_size, tables.k_tags,
+    )
+    inflight = backend.init_inflight(tables.n_clusters, tables.k_tags)
+    _, _, stats = backend.deliver_fabric(
+        jnp.ones((tables.n_neurons,)), *args, inflight=inflight)
+    nc = tables.n_clusters
+    observed = np.asarray(stats.delivered).reshape(nc, nc)
+    np.testing.assert_array_equal(observed, traffic_matrix(tables))
+
+    prof = TrafficProfile.empty(nc, fab.n_tiles)
+    prof.observe(stats)
+    assert prof.steps == 1
+    np.testing.assert_array_equal(prof.matrix(), traffic_matrix(tables))
+    assert prof.drift(traffic_matrix(tables)) == pytest.approx(0.0)
+    assert prof.total_link_dropped == 0.0
+
+
+def test_traffic_profile_accumulation_and_validation():
+    nc, nt = 3, 4
+    prof = TrafficProfile.empty(nc, nt)
+    assert prof.drift(np.ones((nc, nc))) == 0.0  # nothing observed yet
+    pair = np.zeros(nc * nc, np.int32)
+    pair[1] = 6  # all traffic on (0 -> 1)
+    link = np.zeros(nt * nt, np.int32)
+    link[2] = 2
+    stats = DeliveryStats(
+        dropped=np.int32(1), link_dropped=link, delivered=pair,
+        hops=None, latency_s=None, energy_j=None,
+    )
+    prof.observe(stats)
+    prof.observe(stats)
+    assert prof.steps == 2 and prof.dropped == 2.0
+    assert prof.total_link_dropped == 4.0
+    assert prof.matrix()[0, 1] == pytest.approx(6.0)
+    np.testing.assert_array_equal(prof.last, prof.pair_delivered / 2)
+    # drift: observed mass all on (0, 1) vs assumed all on (1, 0) -> TV = 1
+    assumed = np.zeros((nc, nc))
+    assumed[1, 0] = 1.0
+    assert prof.drift(assumed) == pytest.approx(1.0)
+    # per-cluster rates spread the row marginal over occupied entries
+    rng = np.random.default_rng(11)
+    tables = _random_net(rng, n=24, cluster=8, k=32, edges=30)
+    prof2 = TrafficProfile.empty(tables.n_clusters, nt)
+    assert prof2.rates(tables).shape == (tables.n_neurons,)
+    # scalar stats are rejected with a pointer at the engine option
+    scalar = DeliveryStats(
+        dropped=np.int32(0), link_dropped=np.int32(0),
+        delivered=np.int32(5), hops=None, latency_s=None, energy_j=None,
+    )
+    with pytest.raises(ValueError, match="per_link_stats"):
+        prof.observe(scalar)
+
+
+def test_batched_delivery_observes_batch_times_matrix():
+    """B identical all-spiking streams deliver B copies of the matrix —
+    observe() sums the batch axis into one per-step total."""
+    fab = Fabric(grid_x=2, grid_y=2, cores_per_tile=2)
+    tables = _random_net(np.random.default_rng(9), fabric=fab)
+    backend = FabricBackend(fabric=fab, tile_of_cluster=tables.tile_of_cluster,
+                            dt=DT, per_link_stats=True)
+    args = (
+        jnp.asarray(tables.src_tag), jnp.asarray(tables.src_dest),
+        jnp.asarray(tables.cam_tag), jnp.asarray(tables.cam_syn),
+        tables.cluster_size, tables.k_tags,
+    )
+    b = 3
+    inflight = backend.init_inflight(tables.n_clusters, tables.k_tags, batch=b)
+    _, _, stats = backend.deliver_fabric(
+        jnp.ones((b, tables.n_neurons)), *args, inflight=inflight)
+    prof = TrafficProfile.empty(tables.n_clusters, fab.n_tiles)
+    prof.observe(stats)
+    np.testing.assert_array_equal(prof.matrix(), b * traffic_matrix(tables))
